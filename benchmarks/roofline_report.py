@@ -1,0 +1,97 @@
+"""Build the EXPERIMENTS.md roofline table from results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load(tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("tag", "") == tag:
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "dominant | model/HLO flops | roofline frac | GiB/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|\n")
+    out = [head]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — |\n")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — | — |\n")
+            continue
+        t = r["terms"]
+        gib = r["memory"].get("total_bytes_per_device", 0) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t.get('useful_flops_ratio', 0):.2f} | "
+            f"{t.get('roofline_fraction', 0):.3f} | {gib:.2f} |\n")
+    return "".join(out)
+
+
+def fmt_compare(base: List[Dict], opt: List[Dict],
+                mesh: str = "16x16") -> str:
+    """Baseline vs optimized-flags bound + roofline fraction."""
+    key = lambda r: (r["arch"], r["shape"])
+    omap = {key(r): r for r in opt if r.get("mesh") == mesh
+            and r["status"] == "ok"}
+    out = ["| arch | shape | base bound s | opt bound s | speedup | "
+           "base frac | opt frac |\n|---|---|---|---|---|---|---|\n"]
+    for r in base:
+        if r.get("mesh") != mesh or r["status"] != "ok":
+            continue
+        o = omap.get(key(r))
+        if o is None:
+            continue
+        bb = max(r["terms"]["compute_s"], r["terms"]["memory_s"],
+                 r["terms"]["collective_s"])
+        ob = max(o["terms"]["compute_s"], o["terms"]["memory_s"],
+                 o["terms"]["collective_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {bb:.3e} | {ob:.3e} | "
+            f"{bb / max(ob, 1e-12):.2f}x | "
+            f"{r['terms'].get('roofline_fraction', 0):.4f} | "
+            f"{o['terms'].get('roofline_fraction', 0):.4f} |\n")
+    return "".join(out)
+
+
+def main():
+    rows = load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    err = [r for r in rows if r["status"] == "error"]
+    skip = [r for r in rows if r["status"] == "skipped"]
+    print(f"# cells: ok={len(ok)} skipped={len(skip)} error={len(err)}")
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in rows if r.get("mesh") == mesh]
+        if sub:
+            print(f"\n## mesh {mesh}\n")
+            print(fmt_table(rows, mesh))
+    opt = load(tag="opt")
+    if opt:
+        print("\n## baseline vs optimized flags (16x16) — see "
+              "EXPERIMENTS.md §Perf\n")
+        print(fmt_compare(rows, opt))
+    for r in err:
+        print("ERROR:", r["arch"], r["shape"], r["mesh"],
+              r.get("error", "")[:200])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale 0.2] [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract,
+plus the per-table CSV blocks.  The roofline report (dry-run derived)
+is appended when results/dryrun JSONs exist.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.12,
+                    help="dataset size fraction of the paper's sizes")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny scale for CI (0.03)")
+    args = ap.parse_args()
+    scale = 0.03 if args.quick else args.scale
+
+    from benchmarks import fig2_hybrid, fig3_output, kernel_bench, table1_hll
+    from benchmarks import roofline_report
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    kernel_bench.main()
+
+    rows1 = table1_hll.main(scale)
+    mean_err = sum(r["pct_error"] for r in rows1) / len(rows1)
+    print(f"table1_mean_hll_error,{0:.1f},{mean_err:.2f}%"
+          f" (paper: <7%; theory m=128: 9.2%)")
+
+    rows2 = fig2_hybrid.main(scale)
+    vs_lsh = sum(1 for r in rows2 if r["hybrid_s"] <= 1.1 * r["lsh_s"])
+    near_best = sum(1 for r in rows2 if r["hybrid_s"] <= max(
+        2.0 * min(r["lsh_s"], r["linear_s"]),
+        min(r["lsh_s"], r["linear_s"]) + 0.01))
+    print(f"fig2_hybrid_vs_lsh,{0:.1f},{vs_lsh}/{len(rows2)} radii with "
+          f"hybrid <= 1.1x LSH-only (paper: hybrid never loses to LSH)")
+    print(f"fig2_hybrid_near_best,{0:.1f},{near_best}/{len(rows2)} radii "
+          f"with hybrid within 2x/10ms of best single strategy")
+
+    rows3 = fig3_output.main(scale)
+    mono = all(rows3[i]["pct_linear_calls"] <= rows3[i + 1]
+               ["pct_linear_calls"] + 1e-9 for i in range(len(rows3) - 1))
+    print(f"fig3_linear_calls_monotone,{0:.1f},{mono}")
+
+    try:
+        roofline_report.main()
+    except Exception as e:  # dry-run results may not exist yet
+        print(f"roofline_report,0.0,skipped ({e})")
+    print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+          f"scale={scale}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper Table 1: cost and relative error of the per-bucket HLLs.
+
+For each (synthetic analogue of the paper's four) dataset:
+  %Cost  = time(bucket-count + HLL merge + estimate) / time(full hybrid
+           query path), averaged over the radius where LSH search wins
+           (the paper's setting);
+  %Error = |candSize_hll - candSize_exact| / candSize_exact averaged
+           over the 100-query set (exact candSize = distinct union of
+           the L probed buckets, computed offline in numpy).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import DATASETS, build_index, pick_radii, prep, timed
+
+
+def exact_cand_sizes(idx, queries) -> np.ndarray:
+    """Distinct union of the query's buckets across tables (ground truth)."""
+    qb = np.asarray(idx._bucket_fn(idx.params, jnp.asarray(queries)))
+    perm = np.asarray(idx.tables.perm)
+    starts = np.asarray(idx.tables.starts)
+    out = np.zeros(len(qb), np.int64)
+    for i, row in enumerate(qb):
+        seen = set()
+        for j, b in enumerate(row):
+            lo, hi = starts[j, b], starts[j, b + 1]
+            seen.update(perm[j, lo:hi].tolist())
+        out[i] = len(seen)
+    return out
+
+
+def run(scale: float = 0.2, seed: int = 0) -> List[Dict]:
+    rows = []
+    for name in DATASETS:
+        x, q, metric = prep(name, scale, seed=seed)
+        radii = pick_radii(x, metric)
+        r = radii[1]  # small radius: LSH clearly beats linear (paper)
+        m = 128
+        idx = build_index(name, x, metric, r, m=m, seed=seed)
+        qj = jnp.asarray(q)
+
+        est = idx.estimate(qj)
+        exact = exact_cand_sizes(idx, q)
+        errs = np.abs(np.asarray(est.cand_est) - exact) / np.maximum(exact, 1)
+
+        def estimate_only(queries):
+            return idx.estimate(queries).cand_est
+
+        t_est = timed(estimate_only, qj)
+        t_query = timed(lambda qq: idx.query(qq, r).route.cand_est, qj)
+        rows.append({
+            "dataset": name, "n": x.shape[0], "metric": metric, "r": r,
+            "m": m, "L": idx.family.L, "k": idx.family.k,
+            "pct_cost": 100.0 * t_est / max(t_query, 1e-9),
+            "pct_error": 100.0 * float(np.mean(errs)),
+            "pct_error_std": 100.0 * float(np.std(errs)),
+            "us_per_call": 1e6 * t_est,
+        })
+    return rows
+
+
+def main(scale: float = 0.2):
+    rows = run(scale)
+    print("table1,dataset,n,pct_cost,pct_error,pct_error_std,us_per_call")
+    for r in rows:
+        print(f"table1,{r['dataset']},{r['n']},{r['pct_cost']:.2f},"
+              f"{r['pct_error']:.2f},{r['pct_error_std']:.2f},"
+              f"{r['us_per_call']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Mini reproduction of the paper's Figure 2 on one dataset analogue:
+hybrid vs LSH-only vs linear-only CPU time across radii (webspam-like
+skewed data, where the paper shows hybrid beating BOTH).
+
+  PYTHONPATH=src python examples/paper_repro.py [--scale 0.1]
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.08)
+    args = ap.parse_args()
+
+    from benchmarks.fig2_hybrid import run
+    rows = run(scale=args.scale, datasets=("webspam",))
+    print(f"{'r':>9} {'hybrid':>9} {'lsh':>9} {'linear':>9} "
+          f"{'%linear-routed':>14}")
+    for row in rows:
+        best = min(row["lsh_s"], row["linear_s"])
+        mark = " <- hybrid wins" if row["hybrid_s"] < best else ""
+        print(f"{row['r']:9.4f} {row['hybrid_s']:9.4f} {row['lsh_s']:9.4f} "
+              f"{row['linear_s']:9.4f} {100*row['frac_linear']:13.0f}%"
+              f"{mark}")
+
+
+if __name__ == "__main__":
+    main()

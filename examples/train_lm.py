@@ -1,0 +1,37 @@
+"""Train a small LM with the full production loop: deterministic data,
+AdamW + cosine schedule + clipping, remat, async atomic checkpoints,
+crash-resume (rerun the script — it continues from the last commit).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 60]
+"""
+import argparse
+import logging
+
+from repro.configs import get_config, reduced_config
+from repro.models.parallel import ParallelConfig
+from repro.train import LoopConfig, TrainConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    cfg = reduced_config(get_config(args.arch), d_model=128, d_ff=256)
+    par = ParallelConfig(mesh=None, attn_chunk_q=64, attn_chunk_k=64,
+                         logits_chunk=64)
+    hist = train_loop(
+        cfg, par, batch=8, seq=64,
+        tcfg=TrainConfig(peak_lr=1e-3, warmup_steps=10,
+                         total_steps=args.steps),
+        lcfg=LoopConfig(steps=args.steps, ckpt_every=20, log_every=5,
+                        ckpt_dir=args.ckpt_dir))
+    print(f"loss: {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f} "
+          f"over {hist['step'][-1] + 1} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — Hybrid LSH (Pham, 2016) as a first-class feature of a
+multi-pod JAX training/serving framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,16 @@
+"""Core library: the paper's Hybrid LSH r-NN reporting data structure.
+
+Public surface:
+  * ``HybridLSHIndex``  — single-host build/query (Algorithms 1 + 2)
+  * ``core.distributed`` — mesh-sharded index with pmax-merged HLLs
+  * ``core.lsh``        — LSH families + CSR tables
+  * ``core.hll``        — HyperLogLog sketches
+  * ``core.cost_model`` — Eq. (1)/(2) + calibration
+  * ``core.multiprobe`` — query-directed multi-probe extension
+"""
+from repro.core.cost_model import CostModel, PAPER_PRESETS, calibrate
+from repro.core.index import HybridLSHIndex, QueryResult
+from repro.core.router import RouteEstimate, estimate_routes
+
+__all__ = ["CostModel", "PAPER_PRESETS", "calibrate", "HybridLSHIndex",
+           "QueryResult", "RouteEstimate", "estimate_routes"]

@@ -1,0 +1,147 @@
+"""HyperLogLog sketches in JAX (Flajolet et al., AofA'07).
+
+The paper attaches one HLL to every LSH bucket so that the union
+cardinality of the L buckets colliding with a query (= ``candSize`` in
+Eq. (1)) can be estimated in O(m*L) time, independent of bucket sizes.
+
+TPU adaptation: buckets are dense CSR ranges, so per-bucket HLLs are a
+dense ``(num_buckets, m)`` register array built in one fused
+``segment_max`` pass.  Register updates are keyed on the *global* point
+id, so the same point produces the same ``(register, rank)`` pair in
+every table and every shard — merging registers with ``max`` therefore
+computes the exact HLL of the *distinct* union, which is what makes the
+candSize estimate correct across tables (paper, Sec. 3.2) and across
+mesh shards (our distributed extension; merge = ``pmax``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hash32",
+    "clz32",
+    "point_register_rank",
+    "build_bucket_hlls",
+    "merge_registers",
+    "estimate_cardinality",
+    "estimate_from_registers",
+    "relative_error",
+]
+
+_UINT = jnp.uint32
+
+# Murmur3-style 32-bit finalizer constants.
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def hash32(x: jax.Array, seed: int = 0) -> jax.Array:
+    """Murmur3 fmix32 of ``x`` (any integer dtype), returns uint32.
+
+    Good avalanche behaviour; used both for HLL register/rank derivation
+    and for bucket-id mixing in the LSH tables.
+    """
+    h = x.astype(_UINT) + jnp.asarray(
+        np.uint32((int(seed) * 0x9E3779B9) & 0xFFFFFFFF), _UINT)
+    h = h ^ (h >> 16)
+    h = h * _C1
+    h = h ^ (h >> 13)
+    h = h * _C2
+    h = h ^ (h >> 16)
+    return h
+
+
+def clz32(x: jax.Array) -> jax.Array:
+    """Branchless count-leading-zeros for uint32 (returns 32 for x == 0).
+
+    Bit-exact (no float log tricks, which mis-round near powers of two).
+    """
+    x = x.astype(_UINT)
+    n = jnp.zeros_like(x, dtype=jnp.int32)
+    for shift, mask in ((16, 0x0000FFFF), (8, 0x00FFFFFF), (4, 0x0FFFFFFF),
+                        (2, 0x3FFFFFFF), (1, 0x7FFFFFFF)):
+        small = x <= jnp.asarray(np.uint32(mask), _UINT)
+        n = jnp.where(small, n + shift, n)
+        x = jnp.where(small, x << shift, x)
+    return jnp.where(x == 0, jnp.int32(32), n)
+
+
+def point_register_rank(ids: jax.Array, m: int, seed: int = 0):
+    """Derive the HLL ``(register, rank)`` update pair for point ids.
+
+    Standard single-hash construction: the top ``p = log2(m)`` bits of the
+    32-bit hash select the register, the rank is the number of leading
+    zeros of the remaining ``32 - p`` bits plus one (capped there by an
+    implicit sentinel bit, as in the reference algorithm).
+    """
+    p = int(m).bit_length() - 1
+    assert (1 << p) == m, f"m must be a power of two, got {m}"
+    h = hash32(ids, seed)
+    reg = (h >> np.uint32(32 - p)).astype(jnp.int32)
+    rest = (h << np.uint32(p)) | jnp.asarray(np.uint32(1) << np.uint32(p - 1), _UINT)
+    rank = clz32(rest) + 1
+    return reg, rank
+
+
+def build_bucket_hlls(ids: jax.Array, bucket_ids: jax.Array, num_buckets: int,
+                      m: int, seed: int = 0) -> jax.Array:
+    """One fused pass: per-bucket HLL registers as ``(num_buckets, m)`` int32.
+
+    ``segment_max`` over the flattened key ``bucket * m + register`` — this
+    is Algorithm 1 line 4 of the paper, vectorized.
+    """
+    reg, rank = point_register_rank(ids, m, seed)
+    seg = bucket_ids.astype(jnp.int32) * m + reg
+    flat = jax.ops.segment_max(rank, seg, num_segments=num_buckets * m,
+                               indices_are_sorted=False)
+    flat = jnp.maximum(flat, 0)  # empty segments come back as dtype-min
+    return flat.reshape(num_buckets, m)
+
+
+def merge_registers(registers: jax.Array, axis=0) -> jax.Array:
+    """Merge HLLs (component-wise max) along ``axis`` — Algorithm 2 line 2."""
+    return jnp.max(registers, axis=axis)
+
+
+def _alpha(m: int) -> float:
+    if m <= 16:
+        return 0.673
+    if m <= 32:
+        return 0.697
+    if m <= 64:
+        return 0.709
+    return 0.7213 / (1.0 + 1.079 / m)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def estimate_cardinality(registers: jax.Array, m: int) -> jax.Array:
+    """HLL estimator with small/large-range corrections.
+
+    ``registers``: (..., m) int32.  Returns float32 estimates shaped (...,).
+    """
+    regs = registers.astype(jnp.float32)
+    raw = _alpha(m) * m * m / jnp.sum(jnp.exp2(-regs), axis=-1)
+    zeros = jnp.sum((registers == 0).astype(jnp.float32), axis=-1)
+    # Small-range (linear counting) correction.
+    small = m * jnp.log(m / jnp.maximum(zeros, 1e-9))
+    est = jnp.where((raw <= 2.5 * m) & (zeros > 0), small, raw)
+    # Large-range correction for the 32-bit hash space.
+    two32 = jnp.float32(2.0**32)
+    est = jnp.where(est > two32 / 30.0,
+                    -two32 * jnp.log1p(-est / two32), est)
+    return est
+
+
+def estimate_from_registers(registers: jax.Array) -> jax.Array:
+    """Convenience wrapper inferring m from the trailing dim."""
+    return estimate_cardinality(registers, int(registers.shape[-1]))
+
+
+def relative_error(m: int) -> float:
+    """Theoretical standard relative error, 1.04 / sqrt(m) (paper Sec. 2)."""
+    return 1.04 / float(np.sqrt(m))

@@ -1,0 +1,156 @@
+"""HybridLSHIndex — the paper's data structure as a single-host module.
+
+Build (Algorithm 1): hash all points into L CSR tables, fusing the
+per-bucket HyperLogLog build.  Query (Algorithm 2): estimate per-query
+LSHCost from bucket sizes + merged HLLs, route each query to LSH-based
+or linear search, execute both groups as fixed-shape batches.
+
+The distributed (mesh-sharded) variant lives in ``core.distributed``;
+the serving integration in ``serve.retrieval``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_lib
+from repro.core.cost_model import CostModel
+from repro.core.lsh import families as fam_lib
+from repro.core.lsh.tables import LSHTables, build_tables
+from repro.core.router import (RouteEstimate, estimate_routes,
+                               partition_indices)
+
+__all__ = ["HybridLSHIndex", "QueryResult"]
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-strategy buffers + per-query bookkeeping.
+
+    ``neighbors(i)`` extracts the reported ids for query i regardless of
+    which strategy served it.
+    """
+
+    route: RouteEstimate
+    lsh_idx: np.ndarray          # query indices served by LSH search
+    lin_idx: np.ndarray          # query indices served by linear search
+    lsh_out: Optional[tuple]     # (ids, dists, mask) for the LSH group
+    lin_out: Optional[tuple]     # (ids, dists, mask) for the linear group
+    n_queries: int
+
+    def neighbors(self, i: int) -> np.ndarray:
+        for idx, out in ((self.lsh_idx, self.lsh_out),
+                         (self.lin_idx, self.lin_out)):
+            if out is None:
+                continue
+            pos = np.nonzero(np.asarray(idx) == i)[0]
+            if len(pos):
+                ids, _, mask = out
+                row = pos[0]
+                return np.asarray(ids[row])[np.asarray(mask[row])]
+        raise KeyError(i)
+
+    def neighbor_sets(self):
+        return {i: set(self.neighbors(i).tolist())
+                for i in range(self.n_queries)}
+
+    @property
+    def frac_linear(self) -> float:
+        served_lin = len(set(np.asarray(self.lin_idx).tolist()))
+        return served_lin / max(self.n_queries, 1)
+
+
+class HybridLSHIndex:
+    """Hybrid LSH/linear r-NN reporting index (the paper's contribution)."""
+
+    def __init__(self, family, *, num_buckets: int, m: int = 64,
+                 cap: int = 64,
+                 cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
+                 key: jax.Array | int = 0,
+                 impl: Optional[str] = None):
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self.family = family
+        self.params = family.init(key)
+        self.num_buckets = int(num_buckets)
+        self.m = int(m)
+        self.cap = int(cap)
+        self.cost_model = cost_model
+        self.impl = impl
+        self.x: Optional[jax.Array] = None
+        self.tables: Optional[LSHTables] = None
+        self._bucket_fn = jax.jit(functools.partial(
+            self.family.bucket_ids, num_buckets=self.num_buckets))
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return 0 if self.x is None else int(self.x.shape[0])
+
+    def build(self, x: jax.Array, chunk: int = 65536) -> "HybridLSHIndex":
+        """Algorithm 1: hash + CSR sort + fused per-bucket HLL build."""
+        self.x = jnp.asarray(x)
+        n = self.x.shape[0]
+        bids = []
+        for lo in range(0, n, chunk):
+            bids.append(self._bucket_fn(self.params, self.x[lo:lo + chunk]))
+        bucket_ids = jnp.concatenate(bids, axis=0)      # (n, L)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        self.tables = build_tables(ids, bucket_ids, self.num_buckets, self.m)
+        return self
+
+    # ------------------------------------------------------------------
+    def estimate(self, queries: jax.Array) -> RouteEstimate:
+        """Algorithm 2 lines 1-4, vectorized over the query batch."""
+        qb = self._bucket_fn(self.params, queries)
+        return estimate_routes(self.tables, qb, self.cost_model, self.n,
+                               impl=self.impl)
+
+    def query(self, queries: jax.Array, r: float,
+              force: Optional[str] = None) -> QueryResult:
+        """Hybrid r-NN reporting.
+
+        force: None (hybrid routing) | "lsh" | "linear" — the two
+        baselines of the paper's Figure 2.
+        """
+        queries = jnp.asarray(queries)
+        nq = queries.shape[0]
+        route = self.estimate(queries)
+        if force == "lsh":
+            use = np.ones(nq, bool)
+        elif force == "linear":
+            use = np.zeros(nq, bool)
+        else:
+            use = np.asarray(route.use_lsh)
+        lsh_idx, lin_idx = partition_indices(use)
+
+        lsh_out = lin_out = None
+        if len(lsh_idx):
+            sub = queries[lsh_idx]
+            qb = self._bucket_fn(self.params, sub)
+            lsh_out = search_lib.lsh_search(
+                self.x, self.tables, qb, sub, float(r),
+                self.family.metric, self.cap,
+                q_chunk=min(32, len(lsh_idx)))
+        if len(lin_idx):
+            lin_out = search_lib.linear_search(
+                self.x, queries[lin_idx], float(r), self.family.metric,
+                impl=self.impl)
+        return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
+                           lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
+
+    # ------------------------------------------------------------------
+    def memory_stats(self) -> Dict[str, Any]:
+        t = self.tables
+        return {
+            "perm_bytes": t.perm.size * 4,
+            "starts_bytes": t.starts.size * 4,
+            "hll_bytes": t.registers.size,
+            "hll_overhead_vs_data": t.registers.size / max(
+                1, self.x.size * self.x.dtype.itemsize),
+        }

@@ -1,0 +1,233 @@
+"""LSH families used by the paper, in JAX.
+
+The paper evaluates four (metric, family) pairs:
+
+  * cosine   -> SimHash (Charikar'02)            [Webspam]
+  * L2       -> p-stable Gaussian (Datar+'04)    [Corel]
+  * L1       -> p-stable Cauchy (Datar+'04)      [CoverType]
+  * Hamming  -> bit sampling (Indyk-Motwani'98)  [MNIST via 64-bit SimHash]
+
+Each family produces, for every point, L table codes.  Codes are packed
+into ``(…, L, W)`` uint32 words (W = ceil(bits_per_code / 32)), then mixed
+into a bucket id in ``[0, num_buckets)``.  All functions are pure and
+jittable; parameters are plain pytrees created from a PRNG key.
+
+Parameterization follows the paper: L is fixed, and
+``k = ceil(log(1 - delta**(1/L)) / log(p1))`` for SimHash / bit sampling
+(footnote 1, also used by E2LSH); for the p-stable families the paper
+fixes (k, w) = (8, 4r) for L1 and (7, 2r) for L2 to reach delta = 10%.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hll import hash32
+
+__all__ = [
+    "SimHash", "PStableL2", "PStableL1", "BitSampling",
+    "k_from_delta", "make_family",
+]
+
+_UINT = jnp.uint32
+
+
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack boolean bits (..., k) into (..., ceil(k/32)) uint32 words."""
+    k = bits.shape[-1]
+    w = (k + 31) // 32
+    pad = w * 32 - k
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(bits.shape[:-1] + (w, 32)).astype(_UINT)
+    powers = (jnp.asarray(np.uint32(1), _UINT) << jnp.arange(32, dtype=_UINT))
+    return jnp.sum(bits * powers, axis=-1, dtype=_UINT)
+
+
+def _mix_words_to_bucket(words: jax.Array, num_buckets: int,
+                         seed: int = 17) -> jax.Array:
+    """Mix (..., W) uint32 words into a bucket id in [0, num_buckets).
+
+    num_buckets must be a power of two.  Boost-style hash combining with a
+    murmur finalizer per word gives well-spread buckets even for k < 32.
+    """
+    assert num_buckets & (num_buckets - 1) == 0, "num_buckets must be 2^t"
+    acc = jnp.full(words.shape[:-1], np.uint32(seed), _UINT)
+    for j in range(words.shape[-1]):
+        acc = hash32(acc ^ words[..., j], seed=seed + j)
+    return (acc & jnp.asarray(np.uint32(num_buckets - 1), _UINT)).astype(jnp.int32)
+
+
+def k_from_delta(p1: float, L: int, delta: float) -> int:
+    """Paper footnote 1: smallest k with (1 - p1^k)^L <= delta."""
+    if not (0.0 < p1 < 1.0):
+        raise ValueError(f"p1 must be in (0,1), got {p1}")
+    return max(1, math.ceil(math.log(1.0 - delta ** (1.0 / L)) / math.log(p1)))
+
+
+def _norm_cdf(x: float) -> float:
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SimHash:
+    """Random-hyperplane LSH for cosine distance (1 - cos theta)."""
+
+    d: int
+    L: int
+    k: int
+    metric: str = "cosine"
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        r = jax.random.normal(key, (self.d, self.L * self.k), jnp.float32)
+        return {"R": r}
+
+    def codes(self, params, x: jax.Array) -> jax.Array:
+        """x: (n, d) -> packed codes (n, L, W) uint32."""
+        proj = x.astype(jnp.float32) @ params["R"]
+        bits = (proj > 0).reshape(x.shape[0], self.L, self.k)
+        return _pack_bits(bits)
+
+    def margins(self, params, x: jax.Array) -> jax.Array:
+        """|projection| per bit — used by query-directed multiprobe."""
+        proj = x.astype(jnp.float32) @ params["R"]
+        return jnp.abs(proj).reshape(x.shape[0], self.L, self.k)
+
+    def bucket_ids(self, params, x: jax.Array, num_buckets: int) -> jax.Array:
+        return _mix_words_to_bucket(self.codes(params, x), num_buckets)
+
+    def p1(self, r: float) -> float:
+        """Collision prob of ONE bit for points at cosine distance r."""
+        theta = math.acos(max(-1.0, min(1.0, 1.0 - r)))
+        return 1.0 - theta / math.pi
+
+    def p1_code(self, r: float) -> float:
+        return self.p1(r) ** self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class _PStableBase:
+    """floor((a.x + b) / w) family (Datar et al. '04)."""
+
+    d: int
+    L: int
+    k: int
+    w: float
+    metric: str = "l2"
+
+    def _draw_a(self, key):  # overridden: gaussian vs cauchy
+        raise NotImplementedError
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        ka, kb = jax.random.split(key)
+        a = self._draw_a(ka)
+        b = jax.random.uniform(kb, (self.L * self.k,), jnp.float32,
+                               0.0, self.w)
+        return {"a": a, "b": b}
+
+    def codes(self, params, x: jax.Array) -> jax.Array:
+        """x: (n, d) -> (n, L, k) int32 lattice coordinates as uint32 words."""
+        proj = (x.astype(jnp.float32) @ params["a"] + params["b"]) / self.w
+        h = jnp.floor(proj).astype(jnp.int32)
+        return h.reshape(x.shape[0], self.L, self.k).astype(_UINT)
+
+    def bucket_ids(self, params, x: jax.Array, num_buckets: int) -> jax.Array:
+        return _mix_words_to_bucket(self.codes(params, x), num_buckets)
+
+    def p1_code(self, r: float) -> float:
+        return self.p1(r) ** self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class PStableL2(_PStableBase):
+    metric: str = "l2"
+
+    def _draw_a(self, key):
+        return jax.random.normal(key, (self.d, self.L * self.k), jnp.float32)
+
+    def p1(self, r: float) -> float:
+        """Datar et al. Eq. for Gaussian p-stable at distance c=r."""
+        t = self.w / max(r, 1e-12)
+        return (1.0 - 2.0 * _norm_cdf(-t)
+                - 2.0 / (math.sqrt(2.0 * math.pi) * t)
+                * (1.0 - math.exp(-t * t / 2.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class PStableL1(_PStableBase):
+    metric: str = "l1"
+
+    def _draw_a(self, key):
+        # Standard Cauchy via tan of uniform.
+        u = jax.random.uniform(key, (self.d, self.L * self.k), jnp.float32,
+                               1e-6, 1.0 - 1e-6)
+        return jnp.tan(math.pi * (u - 0.5))
+
+    def p1(self, r: float) -> float:
+        t = self.w / max(r, 1e-12)
+        return (2.0 * math.atan(t) / math.pi
+                - math.log1p(t * t) / (math.pi * t))
+
+
+@dataclasses.dataclass(frozen=True)
+class BitSampling:
+    """Bit sampling LSH for Hamming distance over packed binary codes.
+
+    Input points are (n, W_in) uint32 fingerprints of ``dim_bits`` bits
+    (the paper uses 64-bit SimHash fingerprints of MNIST).
+    """
+
+    dim_bits: int
+    L: int
+    k: int
+    metric: str = "hamming"
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        pos = jax.random.randint(key, (self.L * self.k,), 0, self.dim_bits,
+                                 jnp.int32)
+        return {"pos": pos}
+
+    def codes(self, params, x: jax.Array) -> jax.Array:
+        """x: (n, W_in) uint32 -> (n, L, W) uint32 sampled-bit codes."""
+        pos = params["pos"]
+        word, bit = pos // 32, (pos % 32).astype(_UINT)
+        bits = (x[:, word] >> bit) & jnp.asarray(np.uint32(1), _UINT)
+        bits = bits.reshape(x.shape[0], self.L, self.k).astype(bool)
+        return _pack_bits(bits)
+
+    def bucket_ids(self, params, x: jax.Array, num_buckets: int) -> jax.Array:
+        return _mix_words_to_bucket(self.codes(params, x), num_buckets)
+
+    def p1(self, r: float) -> float:
+        return 1.0 - float(r) / float(self.dim_bits)
+
+    def p1_code(self, r: float) -> float:
+        return self.p1(r) ** self.k
+
+
+def make_family(metric: str, *, d: int, L: int, r: float, delta: float = 0.1,
+                k: int | None = None, w: float | None = None):
+    """Build the family the paper pairs with ``metric`` at radius ``r``.
+
+    Mirrors the paper's experiment section: SimHash / bit sampling derive k
+    from (L, delta, p1(r)); the p-stable families use the paper's fixed
+    (k, w) presets unless overridden.
+    """
+    if metric == "cosine":
+        fam = SimHash(d=d, L=L, k=1)
+        kk = k or k_from_delta(fam.p1(r), L, delta)
+        return SimHash(d=d, L=L, k=kk)
+    if metric == "hamming":
+        fam = BitSampling(dim_bits=d, L=L, k=1)
+        kk = k or k_from_delta(fam.p1(r), L, delta)
+        return BitSampling(dim_bits=d, L=L, k=kk)
+    if metric == "l2":
+        return PStableL2(d=d, L=L, k=k or 7, w=w or 2.0 * r)
+    if metric == "l1":
+        return PStableL1(d=d, L=L, k=k or 8, w=w or 4.0 * r)
+    raise ValueError(f"unknown metric {metric!r}")

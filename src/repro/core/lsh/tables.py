@@ -1,0 +1,123 @@
+"""CSR bucket tables with per-bucket HyperLogLogs (Algorithm 1, TPU-native).
+
+A classic LSH hash table is a pointer-chasing dict; on TPU we store each
+table as a CSR layout over a dense power-of-two bucket space:
+
+  perm      (L, n)        point ids, sorted by bucket id, per table
+  starts    (L, B + 1)    bucket offsets into ``perm``
+  registers (L, B, m)     per-bucket HLL registers (uint8)
+
+Build is one ``argsort`` + one ``segment_sum`` + one ``segment_max`` per
+table (vmapped over L).  Bucket *sizes* give the exact ``#collisions``
+term of Eq. (1); the registers give the mergeable candSize estimator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hll as hll_lib
+
+__all__ = ["LSHTables", "build_tables", "bucket_counts", "gather_registers",
+           "gather_candidates"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LSHTables:
+    """Stacked CSR tables (a pytree; leaves are the three arrays)."""
+
+    perm: jax.Array        # (L, n) int32
+    starts: jax.Array      # (L, B + 1) int32
+    registers: jax.Array   # (L, B, m) uint8
+
+    @property
+    def L(self) -> int:
+        return self.perm.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.perm.shape[1]
+
+    @property
+    def num_buckets(self) -> int:
+        return self.registers.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.registers.shape[2]
+
+    def tree_flatten(self):
+        return (self.perm, self.starts, self.registers), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def _build_one_table(ids: jax.Array, bucket_ids: jax.Array, num_buckets: int,
+                     m: int) -> Dict[str, jax.Array]:
+    order = jnp.argsort(bucket_ids)
+    perm = ids[order].astype(jnp.int32)
+    counts = jax.ops.segment_sum(jnp.ones_like(bucket_ids, jnp.int32),
+                                 bucket_ids, num_segments=num_buckets)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    regs = hll_lib.build_bucket_hlls(ids, bucket_ids, num_buckets, m)
+    return {"perm": perm, "starts": starts,
+            "registers": regs.astype(jnp.uint8)}
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "m"))
+def build_tables(ids: jax.Array, bucket_ids: jax.Array, num_buckets: int,
+                 m: int) -> LSHTables:
+    """ids: (n,) global point ids; bucket_ids: (n, L) per-table buckets."""
+    out = jax.vmap(lambda b: _build_one_table(ids, b, num_buckets, m),
+                   in_axes=1)(bucket_ids)
+    return LSHTables(out["perm"], out["starts"], out["registers"])
+
+
+def bucket_counts(tables: LSHTables, qbuckets: jax.Array) -> jax.Array:
+    """qbuckets: (Q, L) -> per-(query, table) bucket sizes (Q, L) int32.
+
+    ``sum(axis=-1)`` of the result is the exact #collisions of Eq. (1).
+    """
+    b = qbuckets.astype(jnp.int32)                      # (Q, L)
+    lidx = jnp.arange(tables.L)[None, :]                # (1, L)
+    lo = tables.starts[lidx, b]
+    hi = tables.starts[lidx, b + 1]
+    return hi - lo
+
+
+def gather_registers(tables: LSHTables, qbuckets: jax.Array) -> jax.Array:
+    """(Q, L) bucket ids -> (Q, L, m) HLL registers of the hit buckets."""
+    lidx = jnp.arange(tables.L)[None, :]
+    return tables.registers[lidx, qbuckets.astype(jnp.int32)]
+
+
+def gather_candidates(tables: LSHTables, qbuckets: jax.Array, cap: int,
+                      sentinel: int) -> jax.Array:
+    """Fixed-capacity candidate gather: (Q, L) buckets -> (Q, L*cap) ids.
+
+    Each table contributes up to ``cap`` ids from the query's bucket;
+    slots beyond the bucket size are filled with ``sentinel`` (an id ==
+    n, sorting after every real id).  Truncation beyond ``cap`` is a
+    recall risk only for buckets the cost model routes to linear search
+    anyway (big buckets => big #collisions => LSHCost > LinearCost).
+    """
+    b = qbuckets.astype(jnp.int32)                      # (Q, L)
+    lidx = jnp.arange(tables.L)[None, :]
+    lo = tables.starts[lidx, b]                          # (Q, L)
+    size = tables.starts[lidx, b + 1] - lo               # (Q, L)
+    offs = jnp.arange(cap, dtype=jnp.int32)              # (cap,)
+    idx = lo[..., None] + offs                           # (Q, L, cap)
+    valid = offs[None, None, :] < size[..., None]
+    n = tables.n
+    gathered = tables.perm[lidx[..., None], jnp.clip(idx, 0, n - 1)]
+    cands = jnp.where(valid, gathered, jnp.int32(sentinel))
+    q = qbuckets.shape[0]
+    return cands.reshape(q, tables.L * cap)

@@ -1,0 +1,117 @@
+"""The two search strategies the hybrid router chooses between.
+
+Both are batched, fixed-shape, jittable functions (TPU execution model):
+
+  * ``linear_search``     — Pallas-blocked brute-force scan (Eq. 2 cost).
+  * ``lsh_search``        — fixed-capacity bucket gather, sort-based
+                            dedup, rowwise candidate verification
+                            (Eq. 1 cost: alpha-term = gather+dedup,
+                            beta-term = verification).
+
+Reporting semantics: every function returns ``(ids, dists, mask)`` where
+``mask[q, i]`` marks a reported r-near neighbor of query q.  Buffers are
+sentinel-padded; ``mask`` already excludes padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsh.tables import LSHTables, gather_candidates
+from repro.kernels import ops
+
+__all__ = ["linear_search", "lsh_search", "dedupe_sorted", "rowwise_dist"]
+
+
+def rowwise_dist(rows: jax.Array, q: jax.Array, metric: str) -> jax.Array:
+    """rows: (..., C, d) candidates vs q: (..., d) -> (..., C) distances.
+
+    Used for candidate verification (gather-bound, so plain VPU math;
+    the full-scan MXU kernel wouldn't help on already-gathered rows).
+    L2 returns squared distance, consistent with ops.pairwise_dist.
+    """
+    if metric == "hamming":
+        from repro.kernels.ref import popcount_u32
+        x = rows.astype(jnp.uint32) ^ q[..., None, :].astype(jnp.uint32)
+        return jnp.sum(popcount_u32(x), axis=-1).astype(jnp.float32)
+    rows = rows.astype(jnp.float32)
+    q = q.astype(jnp.float32)[..., None, :]
+    if metric == "l2":
+        d = rows - q
+        return jnp.sum(d * d, axis=-1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(rows - q), axis=-1)
+    if metric == "cosine":
+        rn = rows / jnp.maximum(
+            jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-12)
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True),
+                             1e-12)
+        return 1.0 - jnp.sum(rn * qn, axis=-1)
+    raise ValueError(metric)
+
+
+def dedupe_sorted(cands: jax.Array, sentinel: int) -> Tuple[jax.Array, jax.Array]:
+    """Sort candidate ids and mask duplicates / sentinels.
+
+    cands: (Q, C) int32 with sentinel padding.  Returns (sorted_ids,
+    first_occurrence_mask).  This is the TPU replacement for the paper's
+    hash-set duplicate removal; its cost is the alpha-term of Eq. (1).
+    """
+    s = jnp.sort(cands, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones(s.shape[:-1] + (1,), bool), s[..., 1:] != s[..., :-1]],
+        axis=-1)
+    return s, first & (s < sentinel)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "impl"))
+def linear_search(x: jax.Array, q: jax.Array, r: float, metric: str,
+                  impl: str | None = None):
+    """Brute-force scan. Returns (ids (Q,n), dists (Q,n), mask (Q,n))."""
+    if metric == "hamming":
+        dists = ops.hamming_dist(q, x, impl=impl).astype(jnp.float32)
+    else:
+        dists = ops.pairwise_dist(q, x, metric, impl=impl)
+    thresh = ops.metric_radius_transform(metric, r)
+    mask = dists <= thresh
+    ids = jnp.broadcast_to(jnp.arange(x.shape[0], dtype=jnp.int32),
+                           dists.shape)
+    return ids, dists, mask
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk"))
+def lsh_search(x: jax.Array, tables: LSHTables, qbuckets: jax.Array,
+               q: jax.Array, r: float, metric: str, cap: int,
+               q_chunk: int = 32):
+    """LSH-based search (steps S2+S3).
+
+    x: (n, d) database rows (or (n, W) packed codes for hamming);
+    qbuckets: (Q, L) bucket of each query per table; q: (Q, d) queries.
+    Returns (ids (Q, L*cap), dists, mask) — deduped, verified.
+    Processes queries in chunks of ``q_chunk`` to bound the gathered
+    candidate working set (L*cap rows of d floats per query).
+    """
+    n = x.shape[0]
+    sentinel = n
+    cands = gather_candidates(tables, qbuckets, cap, sentinel)  # (Q, C)
+    thresh = ops.metric_radius_transform(metric, r)
+
+    def chunk_fn(args):
+        c, qq = args                                   # (qc, C), (qc, d)
+        ids, uniq = dedupe_sorted(c, sentinel)
+        rows = x[jnp.clip(ids, 0, n - 1)]              # (qc, C, d)
+        dists = rowwise_dist(rows, qq, metric)
+        mask = uniq & (dists <= thresh)
+        return ids, dists, mask
+
+    nq = q.shape[0]
+    if nq % q_chunk == 0 and nq > q_chunk:
+        c_r = cands.reshape(nq // q_chunk, q_chunk, -1)
+        q_r = q.reshape(nq // q_chunk, q_chunk, -1)
+        ids, dists, mask = jax.lax.map(chunk_fn, (c_r, q_r))
+        flat = lambda a: a.reshape(nq, -1)
+        return flat(ids), flat(dists), flat(mask)
+    return chunk_fn((cands, q))

@@ -1,0 +1,3 @@
+from repro.distributed.pipeline import bubble_fraction, gpipe
+
+__all__ = ["bubble_fraction", "gpipe"]

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot spots (distance scans,
+hashing, HLL merge) with jnp oracles in ref.py and wrappers in ops.py."""

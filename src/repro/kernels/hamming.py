@@ -1,0 +1,50 @@
+"""Pallas TPU kernel for packed Hamming distances (bit-sampling LSH path).
+
+XOR + SWAR popcount on the VPU over uint32 words.  The word axis W is
+small (2 words for the paper's 64-bit MNIST fingerprints), so one
+``(TQ, TN, W)`` broadcast tile fits easily in VMEM
+(128 * 128 * 8 words * 4 B = 512 KiB at the default tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_U = jnp.uint32
+
+
+def _popcount(v):
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((v * np.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _kernel(q_ref, x_ref, out_ref):
+    x = q_ref[...][:, None, :] ^ x_ref[...][None, :, :]
+    out_ref[...] = jnp.sum(_popcount(x), axis=-1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
+def hamming_pallas(qc: jax.Array, xc: jax.Array, *, tq: int = 128,
+                   tn: int = 128, interpret: bool = False) -> jax.Array:
+    """(Q, W) x (N, W) packed uint32 codes -> (Q, N) int32 distances."""
+    nq, w = qc.shape
+    nn = xc.shape[0]
+    assert nq % tq == 0 and nn % tn == 0, (qc.shape, xc.shape)
+    grid = (nq // tq, nn // tn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nn), jnp.int32),
+        interpret=interpret,
+    )(qc.astype(_U), xc.astype(_U))

@@ -1,0 +1,153 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles (a) padding inputs to tile multiples and slicing outputs back,
+(b) backend dispatch: on TPU -> compiled Pallas kernels, elsewhere ->
+the pure-jnp oracles in ``ref.py`` (Pallas ``interpret=True`` is for
+correctness tests, not speed).  Callers may force a backend with
+``impl=`` ("pallas", "pallas_interpret", "ref", None = auto).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import distances as _dist
+from repro.kernels import hamming as _ham
+from repro.kernels import hll_merge as _hllm
+from repro.kernels import ref as _ref
+from repro.kernels import simhash as _sim
+
+__all__ = ["pairwise_dist", "hamming_dist", "simhash_fingerprint",
+           "hll_merge_estimate", "pad_to", "metric_radius_transform"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: Optional[str]) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+def pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def metric_radius_transform(metric: str, r: float) -> float:
+    """Map a user radius to the raw-kernel comparison value.
+
+    The L2 kernels return *squared* distances, so the threshold is r^2;
+    other metrics are identity.
+    """
+    return r * r if metric == "l2" else r
+
+
+def pairwise_dist(q: jax.Array, x: jax.Array, metric: str,
+                  impl: Optional[str] = None) -> jax.Array:
+    """(Q, d) x (N, d) -> (Q, N) float32 distances.
+
+    NOTE: metric "l2" returns SQUARED L2 (compare against r^2 via
+    ``metric_radius_transform``) — avoids a full-matrix sqrt on the scan.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        if metric == "l2":
+            return _ref.pairwise_sql2(q, x)
+        if metric == "l1":
+            return _ref.pairwise_l1(q, x)
+        if metric == "cosine":
+            return _ref.pairwise_cosine(q, x)
+        raise ValueError(metric)
+
+    interpret = impl == "pallas_interpret"
+    nq, nn = q.shape[0], x.shape[0]
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+
+    if metric in ("l2", "cosine"):
+        tq, tn, td = _dist.DEFAULT_TQ, _dist.DEFAULT_TN, _dist.DEFAULT_TD
+        tq, tn, td = min(tq, 128 if interpret else tq), \
+            min(tn, 128 if interpret else tn), min(td, 128 if interpret else td)
+        qp = pad_to(pad_to(q, tq, 0), td, 1)
+        xp = pad_to(pad_to(x, tn, 0), td, 1)
+        qn = jnp.sum(qp.astype(jnp.float32) ** 2, axis=-1)
+        xn = jnp.sum(xp.astype(jnp.float32) ** 2, axis=-1)
+        out = _dist.pairwise_dot_pallas(
+            qp, xp, qn, xn, mode="l2" if metric == "l2" else "cosine",
+            tq=tq, tn=tn, td=td, interpret=interpret)
+        out = out[:nq, :nn]
+        return jnp.maximum(out, 0.0) if metric == "l2" else out
+    if metric == "l1":
+        tq = tn = td = 128
+        qp = pad_to(pad_to(q, tq, 0), td, 1)
+        xp = pad_to(pad_to(x, tn, 0), td, 1)
+        return _dist.pairwise_l1_pallas(qp, xp, tq=tq, tn=tn, td=td,
+                                        interpret=interpret)[:nq, :nn]
+    raise ValueError(metric)
+
+
+def hamming_dist(qc: jax.Array, xc: jax.Array,
+                 impl: Optional[str] = None) -> jax.Array:
+    """(Q, W) x (N, W) packed uint32 -> (Q, N) int32 Hamming distances."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.hamming(qc, xc)
+    interpret = impl == "pallas_interpret"
+    nq, nn = qc.shape[0], xc.shape[0]
+    tq = tn = 128
+    qp = pad_to(qc, tq, 0)
+    xp = pad_to(xc, tn, 0)
+    return _ham.hamming_pallas(qp, xp, tq=tq, tn=tn,
+                               interpret=interpret)[:nq, :nn]
+
+
+def pad_projection(r: jax.Array, L: int, k: int) -> jax.Array:
+    """(d, L*k) projection -> (d, L*words*32) zero-padded per table."""
+    d = r.shape[0]
+    words = (k + 31) // 32
+    r = r.reshape(d, L, k)
+    r = jnp.pad(r, ((0, 0), (0, 0), (0, words * 32 - k)))
+    return r.reshape(d, L * words * 32)
+
+
+def simhash_fingerprint(x: jax.Array, r: jax.Array, L: int, k: int,
+                        impl: Optional[str] = None) -> jax.Array:
+    """(N, d) points, (d, L*k) projections -> (N, L, ceil(k/32)) u32."""
+    impl = _resolve(impl)
+    words = (k + 31) // 32
+    rp = pad_projection(r, L, k)
+    if impl == "ref":
+        return _ref.simhash_fingerprint(x, rp, L, words)
+    interpret = impl == "pallas_interpret"
+    n = x.shape[0]
+    tn = 128
+    xp = pad_to(x, tn, 0)
+    return _sim.simhash_pallas(xp, rp, L=L, words=words, tn=tn,
+                               interpret=interpret)[:n]
+
+
+def hll_merge_estimate(regs: jax.Array,
+                       impl: Optional[str] = None) -> jax.Array:
+    """(Q, L, m) uint8 registers -> (Q,) float32 candSize estimates."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.hll_merge_estimate(regs)
+    interpret = impl == "pallas_interpret"
+    q = regs.shape[0]
+    tq = 8 if interpret else 64
+    rp = pad_to(regs, tq, 0)
+    return _hllm.hll_merge_estimate_pallas(rp, tq=tq,
+                                           interpret=interpret)[:q]

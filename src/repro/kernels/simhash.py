@@ -1,0 +1,51 @@
+"""Pallas TPU kernel for SimHash fingerprinting (hash step S1).
+
+Projection is a ``(TN, d) @ (d, L*W*32)`` MXU matmul; sign extraction
+and bit packing (dot with 2^j) run on the VPU.  The projection matrix is
+replicated into VMEM across grid steps (d and L*k are small for LSH use:
+d <= ~1k, L*k <= ~2k  ->  <= ~8 MiB f32).
+
+The projection matrix is pre-padded by ops.py to ``(d, L * W * 32)``
+with zero columns beyond each table's true k bits; zero projections
+yield 0-bits, matching families._pack_bits and ref.simhash_fingerprint.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_U = jnp.uint32
+
+
+def _kernel(x_ref, r_ref, out_ref, *, L: int, words: int):
+    proj = jnp.dot(x_ref[...], r_ref[...],
+                   preferred_element_type=jnp.float32)   # (TN, L*W*32)
+    tn = proj.shape[0]
+    bits = (proj > 0).reshape(tn, L, words, 32).astype(_U)
+    powers = jnp.asarray(np.uint32(1), _U) << jnp.arange(32, dtype=_U)
+    out_ref[...] = jnp.sum(bits * powers, axis=-1, dtype=_U)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "words", "tn", "interpret"))
+def simhash_pallas(x: jax.Array, r_padded: jax.Array, *, L: int, words: int,
+                   tn: int = 256, interpret: bool = False) -> jax.Array:
+    """(N, d) x (d, L*words*32) -> packed fingerprints (N, L, words) u32."""
+    n, d = x.shape
+    assert n % tn == 0, x.shape
+    assert r_padded.shape == (d, L * words * 32), r_padded.shape
+    grid = (n // tn,)
+    return pl.pallas_call(
+        functools.partial(_kernel, L=L, words=words),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, L * words * 32), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, L, words), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L, words), _U),
+        interpret=interpret,
+    )(x.astype(jnp.float32), r_padded.astype(jnp.float32))

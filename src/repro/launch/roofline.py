@@ -1,0 +1,126 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e model).
+
+The SPMD-partitioned module is per-device, so cost_analysis FLOPs/bytes
+and HLO tensor shapes are already per-chip quantities:
+
+  compute term    = flops_per_chip / peak_flops
+  memory term     = bytes_per_chip / hbm_bw
+  collective term = wire_bytes_per_chip / link_bw
+
+wire bytes come from parsing the optimized HLO for collective ops and
+summing result-tensor bytes with a per-op wire factor (all-reduce moves
+~2x its payload ring-wise; gather/scatter/permute ~1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-like hardware model (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+# one result tensor:  bf16[16,512,128]{...}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# op line:  %name = <shape or tuple> opcode(
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type wire bytes (per device) from optimized HLO."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_txt) * _WIRE_FACTOR[op]
+        counts[op] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    wire_bytes_per_chip: float
+    model_flops_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS: remat/masking/redundancy waste."""
+        return self.model_flops_per_chip / max(self.flops_per_chip, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time: the score."""
+        model_t = self.model_flops_per_chip / PEAK_FLOPS_BF16
+        return model_t / max(self.bound_s, 1e-30)
+
+
+def terms_from_cost(cost: Dict[str, float], wire_bytes: float,
+                    model_flops_global: float, chips: int) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=byts / HBM_BW,
+        collective_s=wire_bytes / ICI_LINK_BW,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        wire_bytes_per_chip=wire_bytes,
+        model_flops_per_chip=model_flops_global / chips,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs per step (global).
+
+    train: 6 * N_active * tokens;  prefill: 2 * N_active * tokens;
+    decode: 2 * N_active * global_batch (one token each).
+    """
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,125 @@
+"""Per-(arch x shape x mesh) parallelism policy + abstract inputs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every input of
+the lowered step — weights, optimizer state, KV caches, token batches —
+so the dry-run lowers/compiles with ZERO device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import cache_specs, init_caches, init_params, param_specs
+from repro.models.parallel import ParallelConfig
+from repro.train.step import TrainConfig, batch_specs, init_state, state_specs
+
+
+def make_par(mesh: Mesh, multi_pod: bool, cfg: ArchConfig,
+             shape: ShapeSpec, **overrides) -> ParallelConfig:
+    """The sharding policy for one dry-run cell (see DESIGN.md §5)."""
+    daxes = ("pod", "data") if multi_pod else ("data",)
+    n_batch_shards = 1
+    for a in daxes:
+        n_batch_shards *= mesh.shape[a]
+
+    kw: Dict[str, Any] = dict(mesh=mesh, data_axes=daxes, seq_shard=True,
+                              fsdp=True, remat="block")
+    if shape.kind == "decode":
+        kw["remat"] = "none"
+        if shape.global_batch >= n_batch_shards:
+            # batch over data axes, cache seq over model axis
+            kw["decode_seq_shard"] = ("model",)
+        else:
+            # global_batch=1 (long_500k): replicate batch, shard the
+            # cache sequence over EVERY axis; fsdp still on data axes.
+            kw["batch_axes"] = ()
+            kw["decode_seq_shard"] = daxes + ("model",)
+    elif shape.kind == "prefill":
+        kw["remat"] = "none"
+    kw.update(overrides)
+    return ParallelConfig(**kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_struct(cfg: ArchConfig, b: int, s: int, with_labels: bool):
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32)
+    if cfg.encoder_layers:
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.num_image_tokens:
+        out["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    return out
+
+
+def abstract_state(cfg: ArchConfig, tcfg: TrainConfig = TrainConfig()):
+    return jax.eval_shape(
+        lambda: init_state(cfg, jax.random.PRNGKey(0), tcfg))
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_caches(cfg: ArchConfig, b: int, cache_len: int,
+                    par: ParallelConfig):
+    mem_len = cfg.encoder_seq or cfg.num_image_tokens
+    return jax.eval_shape(
+        lambda: init_caches(cfg, b, cache_len, par, memory_len=mem_len))
+
+
+def to_shardings(abstract_tree, spec_tree, mesh: Mesh):
+    """Map spec tuples onto the abstract tree's structure.
+
+    tree_map flattens ``spec_tree`` *up to* the abstract tree's treedef,
+    so tuple spec entries land intact at array-leaf positions even
+    though tuples are also used as containers ("blocks").
+    """
+    return jax.tree_util.tree_map(
+        lambda a, s: NamedSharding(mesh, P(*s)), abstract_tree, spec_tree)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, par: ParallelConfig,
+                tcfg: TrainConfig = TrainConfig()):
+    """(args, in_shardings, out_shardings_hint) for the cell's step fn."""
+    mesh = par.mesh
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        st = abstract_state(cfg, tcfg)
+        ba = _batch_struct(cfg, b, s, with_labels=True)
+        st_sh = to_shardings(st, state_specs(cfg, par, tcfg), mesh)
+        ba_sh = to_shardings(ba, batch_specs(cfg, par), mesh)
+        return (st, ba), (st_sh, ba_sh), (st_sh, None)
+    if shape.kind == "prefill":
+        pa = abstract_params(cfg)
+        ba = _batch_struct(cfg, b, s, with_labels=False)
+        pa_sh = to_shardings(pa, param_specs(cfg, par), mesh)
+        bspec = {"tokens": (par.batch(), None)}
+        if cfg.encoder_layers:
+            bspec["frames"] = (par.batch(), None, None)
+        if cfg.num_image_tokens:
+            bspec["image_embeds"] = (par.batch(), None, None)
+        ba_sh = to_shardings(ba, bspec, mesh)
+        ca = abstract_caches(cfg, b, s, par)
+        ca_sh = to_shardings(ca, cache_specs(cfg, par), mesh)
+        tok_sh = NamedSharding(mesh, P(par.batch()))
+        return (pa, ba), (pa_sh, ba_sh), (tok_sh, ca_sh, tok_sh)
+    # decode
+    pa = abstract_params(cfg)
+    ca = abstract_caches(cfg, b, s, par)
+    tok = _sds((b,), jnp.int32)
+    lens = _sds((b,), jnp.int32)
+    pa_sh = to_shardings(pa, param_specs(cfg, par), mesh)
+    ca_sh = to_shardings(ca, cache_specs(cfg, par), mesh)
+    tok_sh = NamedSharding(mesh, P(par.batch()))
+    return ((pa, ca, tok, lens), (pa_sh, ca_sh, tok_sh, tok_sh),
+            (tok_sh, ca_sh, tok_sh))

@@ -1,0 +1,77 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+      --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+On a real cluster this process runs once per host with
+jax.distributed.initialize() (call guarded behind --coordinator); in
+this container it runs single-process.  Restart-after-crash resumes
+from the latest committed checkpoint automatically.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed (cluster mode)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host platform devices (debug mesh)")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    if args.coordinator:
+        jax.distributed.initialize(coordinator_address=args.coordinator)
+
+    from repro.configs import get_config, reduced_config
+    from repro.models.parallel import ParallelConfig
+    from repro.train import LoopConfig, TrainConfig, train_loop
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+
+    if args.devices:
+        from repro.launch.mesh import make_debug_mesh
+        n = args.devices
+        mesh = make_debug_mesh((n // 2, 2), ("data", "model"))
+        par = ParallelConfig(mesh=mesh, data_axes=("data",),
+                             attn_chunk_q=min(128, args.seq),
+                             attn_chunk_k=min(128, args.seq),
+                             logits_chunk=min(512, args.seq))
+    else:
+        par = ParallelConfig(mesh=None, attn_chunk_q=min(128, args.seq),
+                             attn_chunk_k=min(128, args.seq),
+                             logits_chunk=min(512, args.seq))
+
+    hist = train_loop(
+        cfg, par, batch=args.batch, seq=args.seq,
+        tcfg=TrainConfig(peak_lr=args.lr, total_steps=args.steps,
+                         warmup_steps=max(1, args.steps // 10),
+                         microbatch=args.microbatch),
+        lcfg=LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                        ckpt_dir=args.ckpt_dir))
+    print("final loss:", hist["loss"][-1] if hist["loss"] else None)
+
+
+if __name__ == "__main__":
+    main()

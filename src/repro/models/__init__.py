@@ -1,0 +1,8 @@
+"""Model zoo: block-pattern assembly covering all 10 assigned archs."""
+from repro.models.parallel import ParallelConfig
+from repro.models.transformer import (cache_specs, decode_step, forward_train,
+                                      init_caches, init_params, param_specs,
+                                      prefill)
+
+__all__ = ["ParallelConfig", "cache_specs", "decode_step", "forward_train",
+           "init_caches", "init_params", "param_specs", "prefill"]

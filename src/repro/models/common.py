@@ -1,0 +1,69 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis: int = 0, scale: float = 1.0,
+               dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+def mlp_init(key, d: int, f: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, (d, f), 0, dtype=dtype),
+            "wg": dense_init(k2, (d, f), 0, dtype=dtype),
+            "wo": dense_init(k3, (f, d), 0, dtype=dtype)}
+
+
+def mlp_apply(params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = x @ params["wi"]
+    g = x @ params["wg"]
+    if act == "silu":
+        h = jax.nn.silu(g) * h
+    elif act == "relu2":           # squared ReLU (nemotron-4)
+        h = jnp.square(jax.nn.relu(g)) * h
+    else:
+        raise ValueError(act)
+    return h @ params["wo"]
+
+
+def mlp_specs(par, stacked: bool = True):
+    return {"wi": par.w_col(stacked), "wg": par.w_col(stacked),
+            "wo": par.w_row(stacked)}

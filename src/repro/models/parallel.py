@@ -1,0 +1,132 @@
+"""Parallelism context threaded through the model zoo.
+
+Model code never hardcodes a mesh: it receives a ``ParallelConfig`` and
+calls ``shard()`` / ``pspec()`` helpers which no-op on a single device
+(smoke tests) and emit sharding constraints / shard_map specs under the
+production mesh.  Axis roles:
+
+  data axes   ('pod', 'data') or ('data',)  — batch / fsdp axis
+  model axis  'model'                        — tensor/expert parallel
+
+Weight layout is FSDP + TP: 2-D weights are P(fsdp_axis, 'model') with
+'model' on the contracted-out ("parallel") dim; stacked block weights
+prepend None.  Activations are P(data_axes, 'model', None) between
+blocks when ``seq_shard`` (Megatron-style sequence parallelism) is on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ParallelConfig", "P"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    # batch_axes defaults to data_axes; set to () for global_batch too
+    # small to shard (long_500k decode) while keeping fsdp on data_axes.
+    batch_axes: Optional[Tuple[str, ...]] = None
+    model_axis: str = "model"
+    seq_shard: bool = True        # sequence-parallel activations
+    fsdp: bool = True             # shard weight dim 0 over data axes
+    remat: str = "block"          # none | block
+    logits_chunk: int = 2048      # seq chunk for the CE loss
+    attn_chunk_q: int = 512
+    attn_chunk_k: int = 512
+    decode_seq_shard: Tuple[str, ...] = ()  # axes sharding the KV seq dim
+    grad_compression: bool = False
+    # --- perf-iteration knobs (see EXPERIMENTS.md §Perf) ---
+    attn_remat: bool = False      # rematerialize attention q-chunks in
+    #                               bwd instead of saving stacked probs
+    attn_probs_bf16: bool = False  # cast softmax probs to bf16 for p@v
+    moe_local_dispatch: bool = False  # shard_map per-shard MoE sort
+    attn_head_shard: bool = False  # pin q/k/v to head-sharding so the
+    #                                seq<->head reshard happens once per
+    #                                layer, not per chunk (§Perf i4)
+    ssm_remat: bool = False       # recompute SSM chunk scans in bwd
+    #                               (the attn_remat analogue for mamba)
+    decode_kv_head_shard: bool = False  # shard decode KV caches by KV
+    #                                head instead of seq: heads are
+    #                                independent, so no LSE psum merge
+    #                                is needed (requires n_kv % model
+    #                                axis == 0; gemma3 decode §Perf)
+
+    # ------------------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, names: Sequence[str]) -> int:
+        if not self.active:
+            return 1
+        s = 1
+        for n in names:
+            s *= self.mesh.shape[n]
+        return s
+
+    @property
+    def n_data(self) -> int:
+        return self.axis_size(self.data_axes)
+
+    @property
+    def n_model(self) -> int:
+        return self.axis_size([self.model_axis])
+
+    # ------------------------------------------------------------------
+    def shard(self, x: jax.Array, *spec) -> jax.Array:
+        """with_sharding_constraint if a mesh is active, else identity."""
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    @property
+    def batch_axes_(self) -> Tuple[str, ...]:
+        return self.data_axes if self.batch_axes is None else self.batch_axes
+
+    def batch(self):
+        """Spec entry for a global-batch dimension."""
+        return (self.batch_axes_ or None) if self.active else None
+
+    def seq(self):
+        """Spec entry for the sequence dim of inter-block activations."""
+        return self.model_axis if (self.active and self.seq_shard) else None
+
+    def fsdp_axis(self):
+        return self.data_axes if (self.active and self.fsdp) else None
+
+    def shard_activations(self, h: jax.Array) -> jax.Array:
+        """(B, S, D) inter-block activation layout."""
+        return self.shard(h, self.batch(), self.seq(), None)
+
+    # Weight specs -----------------------------------------------------
+    def w_col(self, stacked: bool = True):
+        """(…, D, F) with F model-parallel (e.g. q/k/v/up projections)."""
+        base = (self.fsdp_axis(), self.model_axis if self.active else None)
+        return ((None,) if stacked else ()) + base
+
+    def w_row(self, stacked: bool = True):
+        """(…, F, D) with F model-parallel (e.g. out/down projections)."""
+        base = (self.model_axis if self.active else None, self.fsdp_axis())
+        return ((None,) if stacked else ()) + base
+
+    def w_vocab(self, stacked: bool = False):
+        """(V, D) embedding/lm_head — vocab-sharded over model axis."""
+        base = (self.model_axis if self.active else None, self.fsdp_axis())
+        return ((None,) if stacked else ()) + base
+
+    def w_replicated(self, stacked: bool = True):
+        return ((None,) if stacked else ())
+
+    def put(self, x: jax.Array, *spec) -> jax.Array:
+        return self.shard(x, *spec)
+
+
+def spec_bytes(x) -> int:
+    return x.size * x.dtype.itemsize

@@ -1,0 +1,320 @@
+"""Mamba-1 and Mamba-2 (SSD) blocks, TPU-native.
+
+No (B, S, d_inner, d_state) materialization: sequences are processed in
+chunks with a ``lax.scan`` carrying the (B, d_inner, d_state) state.
+
+  * Mamba-1: within-chunk ``lax.associative_scan`` over the diagonal
+    recurrence h_t = exp(dt_t*A) h_{t-1} + dt_t B_t x_t (log-depth,
+    numerically safe — no exp of positive cumsums).
+  * Mamba-2: the SSD matmul form — intra-chunk decay-masked C B^T
+    "attention" (MXU) + inter-chunk scalar-decay state recurrence.
+
+Decode is the O(1) single-step recurrence; the state is the whole
+"KV cache" (this is why the SSM/hybrid archs run the long_500k cell).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+
+# --------------------------------------------------------------- params
+def init_mamba1(key, d_model: int, d_state: int, expand: int, d_conv: int,
+                dt_rank: int, dtype=jnp.bfloat16):
+    di = expand * d_model
+    dtr = dt_rank or -(-d_model // 16)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * di), 0, dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, di), 0, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * d_state), 0, dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), 0, dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d_model), 0, dtype=dtype),
+    }
+
+
+def mamba1_specs(par, stacked: bool = True):
+    st = (None,) if stacked else ()
+    ma = par.model_axis if par.active else None
+    fa = par.fsdp_axis()
+    return {"in_proj": st + (fa, ma), "conv_w": st + (None, ma),
+            "conv_b": st + (ma,), "x_proj": st + (ma, None),
+            "dt_proj": st + (None, ma), "dt_bias": st + (ma,),
+            "A_log": st + (ma, None), "D": st + (ma,),
+            "out_proj": st + (ma, fa)}
+
+
+def init_mamba2(key, d_model: int, d_state: int, expand: int, d_conv: int,
+                head_dim: int, dtype=jnp.bfloat16):
+    di = expand * d_model
+    nh = di // head_dim
+    ks = jax.random.split(key, 6)
+    d_in = 2 * di + 2 * d_state + nh
+    return {
+        "in_proj": dense_init(ks[0], (d_model, d_in), 0, dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, di + 2 * d_state), 0,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * d_state,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d_model), 0, dtype=dtype),
+    }
+
+
+def mamba2_specs(par, stacked: bool = True):
+    st = (None,) if stacked else ()
+    ma = par.model_axis if par.active else None
+    fa = par.fsdp_axis()
+    return {"in_proj": st + (fa, ma), "conv_w": st + (None, ma),
+            "conv_b": st + (ma,), "A_log": st + (ma,),
+            "dt_bias": st + (ma,), "D": st + (ma,),
+            "gate_norm": st + (ma,), "out_proj": st + (ma, fa)}
+
+
+# ----------------------------------------------------------------- conv
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via kernel-size shifts. x: (B, S, C)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x_new: jax.Array, conv_state: jax.Array, w: jax.Array,
+              b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x_new: (B, C); conv_state: (B, k-1, C)."""
+    full = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # (B,k,C)
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_new.dtype), full[:, 1:]
+
+
+def _divisor_chunk(s: int, c: int) -> int:
+    """Largest divisor of s that is <= c (chunked scans need s % k == 0)."""
+    for d in range(min(c, s), 0, -1):
+        if s % d == 0:
+            return d
+    return 1
+
+
+# -------------------------------------------------------------- mamba-1
+def mamba1_scan(xb, dt, bmat, cmat, a_neg, h0, chunk: int,
+                remat: bool = False):
+    """Chunked selective scan.
+
+    xb, dt: (B, S, di); bmat, cmat: (B, S, N); a_neg: (di, N) (negative);
+    h0: (B, di, N).  Returns (y (B, S, di), h_final).
+    """
+    b, s, di = xb.shape
+    n = bmat.shape[-1]
+    k = _divisor_chunk(s, chunk)
+    nc = s // k
+
+    def to_chunks(t):
+        return t.reshape(b, nc, k, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(xb.astype(jnp.float32)), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(bmat.astype(jnp.float32)),
+          to_chunks(cmat.astype(jnp.float32)))
+
+    def step(h, inp):
+        xk, dtk, bk, ck = inp                     # (B,K,di) / (B,K,N)
+        da = dtk[..., None] * a_neg               # (B,K,di,N)
+        decay = jnp.exp(da)
+        u = (dtk * xk)[..., None] * bk[:, :, None, :]
+        u = u.at[:, 0].add(decay[:, 0] * h)
+
+        def comb(lt, rt):
+            al, bl = lt
+            ar, br = rt
+            return al * ar, ar * bl + br
+
+        _, hs = jax.lax.associative_scan(comb, (decay, u), axis=1)
+        y = jnp.einsum("bkdn,bkn->bkd", hs, ck)
+        return hs[:, -1], y
+
+    if remat:
+        step = jax.checkpoint(step)
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    return y, h_final
+
+
+def mamba1_block(params, x: jax.Array, *, d_state: int, chunk: int,
+                 dt_rank: int, return_state: bool = False,
+                 remat: bool = False):
+    """Full Mamba-1 mixer. x: (B, S, D) -> (B, S, D).
+
+    With ``return_state`` also returns the decode state
+    {"conv": (B, k-1, di) pre-conv inputs, "ssm": (B, di, N)}.
+    """
+    b, s, _ = x.shape
+    di = params["D"].shape[0]
+    dtr = dt_rank
+    xz = x @ params["in_proj"]
+    xb_raw, z = jnp.split(xz, 2, axis=-1)
+    xb = jax.nn.silu(causal_conv(xb_raw, params["conv_w"], params["conv_b"]))
+    proj = xb @ params["x_proj"]                  # (B,S,dtr+2N)
+    dt_low = proj[..., :dtr]
+    bmat = proj[..., dtr:dtr + d_state].astype(jnp.float32)
+    cmat = proj[..., dtr + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ params["dt_proj"]).astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    h0 = jnp.zeros((b, di, d_state), jnp.float32)
+    y, h_final = mamba1_scan(xb, dt, bmat, cmat, a_neg, h0, chunk,
+                             remat=remat)
+    y = y + params["D"] * xb.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        k = params["conv_w"].shape[0]
+        state = {"conv": xb_raw[:, s - (k - 1):], "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba1_decode(params, x_tok: jax.Array, state: dict, *, d_state: int,
+                  dt_rank: int) -> Tuple[jax.Array, dict]:
+    """One step. x_tok: (B, D); state: {"conv": (B,k-1,di), "ssm": (B,di,N)}."""
+    xz = x_tok @ params["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)
+    xb, conv_state = conv_step(xb, state["conv"], params["conv_w"],
+                               params["conv_b"])
+    xb = jax.nn.silu(xb)
+    proj = xb @ params["x_proj"]
+    dtr = dt_rank
+    dt = jax.nn.softplus(
+        (proj[..., :dtr] @ params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                  # (B, di)
+    bm = proj[..., dtr:dtr + d_state].astype(jnp.float32)     # (B, N)
+    cm = proj[..., dtr + d_state:].astype(jnp.float32)
+    a_neg = -jnp.exp(params["A_log"])                         # (di, N)
+    h = state["ssm"]
+    h = h * jnp.exp(dt[..., None] * a_neg) \
+        + (dt * xb.astype(jnp.float32))[..., None] * bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cm) + params["D"] * xb.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_tok.dtype)
+    return y @ params["out_proj"], {"conv": conv_state, "ssm": h}
+
+
+# -------------------------------------------------------------- mamba-2
+def ssd_scan(x, dt, bmat, cmat, a_neg, h0, chunk: int,
+             remat: bool = False):
+    """SSD chunked scan (Mamba-2).
+
+    x: (B, S, nh, P); dt: (B, S, nh); bmat/cmat: (B, S, N);
+    a_neg: (nh,); h0: (B, nh, P, N).  Returns (y, h_final).
+    """
+    b, s, nh, p = x.shape
+    n = bmat.shape[-1]
+    k = _divisor_chunk(s, chunk)
+    nc = s // k
+
+    def to_chunks(t):
+        return t.reshape(b, nc, k, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (to_chunks(x.astype(jnp.float32)), to_chunks(dt.astype(jnp.float32)),
+          to_chunks(bmat.astype(jnp.float32)),
+          to_chunks(cmat.astype(jnp.float32)))
+
+    tri = jnp.tril(jnp.ones((k, k), bool))
+
+    def step(h, inp):
+        xk, dtk, bk, ck = inp                      # (B,K,nh,P),(B,K,nh),(B,K,N)
+        da = dtk * a_neg                           # (B,K,nh)
+        cum = jnp.cumsum(da, axis=1)               # (B,K,nh)
+        # Intra-chunk: decay-masked CB^T "attention".
+        cb = jnp.einsum("btn,bsn->bts", ck, bk)    # (B,K,K)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]   # (B,K,K,nh)
+        w = cb[..., None] * jnp.exp(jnp.where(tri[None, ..., None], diff, 0.0))
+        w = jnp.where(tri[None, ..., None], w, 0.0)
+        xdt = xk * dtk[..., None]                  # (B,K,nh,P)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xdt)
+        # Inter-chunk: contribution of the carried state.
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", ck, h, jnp.exp(cum))
+        # State update.
+        rem = jnp.exp(cum[:, -1:, :] - cum)        # (B,K,nh)
+        h_new = h * jnp.exp(cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("bshp,bsn,bsh->bhpn", xdt, bk, rem)
+        return h_new, y_intra + y_inter
+
+    if remat:
+        step = jax.checkpoint(step)
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, p)
+    return y, h_final
+
+
+def mamba2_block(params, x: jax.Array, *, d_state: int, head_dim: int,
+                 chunk: int, norm_eps: float = 1e-5,
+                 return_state: bool = False, remat: bool = False):
+    """Full Mamba-2 mixer. x: (B, S, D) -> (B, S, D)."""
+    b, s, _ = x.shape
+    nh = params["A_log"].shape[0]
+    di = nh * head_dim
+    proj = x @ params["in_proj"]
+    z = proj[..., :di]
+    xbc_raw = proj[..., di:di + di + 2 * d_state]
+    dt_raw = proj[..., -nh:]
+    xbc = jax.nn.silu(causal_conv(xbc_raw, params["conv_w"],
+                                  params["conv_b"]))
+    xb = xbc[..., :di].reshape(b, s, nh, head_dim)
+    bmat = xbc[..., di:di + d_state].astype(jnp.float32)
+    cmat = xbc[..., di + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    h0 = jnp.zeros((b, nh, head_dim, d_state), jnp.float32)
+    y, h_final = ssd_scan(xb, dt, bmat, cmat, a_neg, h0, chunk,
+                          remat=remat)
+    y = y + params["D"][:, None] * xb.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                params["gate_norm"], norm_eps).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        k = params["conv_w"].shape[0]
+        state = {"conv": xbc_raw[:, s - (k - 1):], "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba2_decode(params, x_tok: jax.Array, state: dict, *, d_state: int,
+                  head_dim: int, norm_eps: float = 1e-5):
+    """One step. state: {"conv": (B,k-1,di+2N), "ssm": (B,nh,P,N)}."""
+    nh = params["A_log"].shape[0]
+    di = nh * head_dim
+    b = x_tok.shape[0]
+    proj = x_tok @ params["in_proj"]
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * d_state]
+    dt_raw = proj[..., -nh:]
+    xbc, conv_state = conv_step(xbc, state["conv"], params["conv_w"],
+                                params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xb = xbc[..., :di].reshape(b, nh, head_dim).astype(jnp.float32)
+    bm = xbc[..., di:di + d_state].astype(jnp.float32)
+    cm = xbc[..., di + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    h = state["ssm"] * jnp.exp(dt * a_neg)[..., None, None] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xb, bm, dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, cm) + params["D"][:, None] * xb
+    y = y.reshape(b, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)),
+                params["gate_norm"], norm_eps).astype(x_tok.dtype)
+    return y @ params["out_proj"], {"conv": conv_state, "ssm": h}

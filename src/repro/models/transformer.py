@@ -1,0 +1,543 @@
+"""Model assembly: block-pattern transformer/SSM/MoE/hybrid LMs.
+
+A model is ``len(pattern)`` heterogeneous layers compiled inline,
+``lax.scan``'d over ``n_repeats`` stacked weight slices, plus an
+unstacked ``tail`` — one code path covers all 10 assigned archs (see
+configs/base.py).  Three entry points:
+
+  forward_train(params, batch, cfg, par)  -> (loss, metrics)
+  prefill(params, batch, cfg, par, cache_len) -> (h_last, caches, lengths)
+  decode_step(params, caches, token, lengths, cfg, par, memory)
+      -> (h_last, caches)
+
+Decode keeps the stacked caches in the loop carry and updates them with
+dynamic_update_index (in-place under donation), so cache memory is not
+doubled by scan ys buffers — this matters at 32k/500k contexts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, CROSS, MAMBA1, MAMBA2, MOE, SHARED_ATTN,
+                                SWA, ArchConfig)
+from repro.models import attention as attn_lib
+from repro.models import embedding as emb_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (dense_init, mlp_apply, mlp_init, mlp_specs,
+                                 rmsnorm, rmsnorm_init)
+from repro.models.parallel import ParallelConfig
+
+# ===================================================================== init
+
+def _init_layer(key, kind: str, cfg: ArchConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    if kind == SHARED_ATTN:
+        return {"marker": jnp.zeros((1,), dt)}  # weights live in "shared"
+    out = {"norm1": rmsnorm_init(d, dt)}
+    if kind in (ATTN, SWA, MOE, CROSS):
+        out["attn"] = attn_lib.init_attn(ks[0], d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.hd, dt)
+        out["norm2"] = rmsnorm_init(d, dt)
+        if kind == MOE:
+            out["moe"] = moe_lib.init_moe(ks[1], d, cfg.d_ff,
+                                          cfg.moe.num_experts, dt)
+        else:
+            out["mlp"] = mlp_init(ks[1], d, cfg.d_ff, dt)
+        if kind == CROSS:
+            out["normx"] = rmsnorm_init(d, dt)
+            out["xattn"] = attn_lib.init_attn(ks[2], d, cfg.n_heads,
+                                              cfg.n_kv_heads, cfg.hd, dt)
+    elif kind == MAMBA1:
+        s = cfg.ssm
+        out["mixer"] = ssm_lib.init_mamba1(ks[0], d, s.d_state, s.expand,
+                                           s.d_conv, s.dt_rank, dt)
+    elif kind == MAMBA2:
+        s = cfg.ssm
+        out["mixer"] = ssm_lib.init_mamba2(ks[0], d, s.d_state, s.expand,
+                                           s.d_conv, s.head_dim, dt)
+    else:
+        raise ValueError(kind)
+    return out
+
+
+def _layer_specs(kind: str, cfg: ArchConfig, par: ParallelConfig,
+                 stacked: bool = True):
+    st = (None,) if stacked else ()
+    if kind == SHARED_ATTN:
+        return {"marker": st}
+    out = {"norm1": st}
+    if kind in (ATTN, SWA, MOE, CROSS):
+        out["attn"] = attn_lib.attn_specs(par, stacked)
+        out["norm2"] = st
+        if kind == MOE:
+            out["moe"] = moe_lib.moe_specs(par, stacked)
+        else:
+            out["mlp"] = mlp_specs(par, stacked)
+        if kind == CROSS:
+            out["normx"] = st
+            out["xattn"] = attn_lib.attn_specs(par, stacked)
+    elif kind == MAMBA1:
+        out["mixer"] = ssm_lib.mamba1_specs(par, stacked)
+    elif kind == MAMBA2:
+        out["mixer"] = ssm_lib.mamba2_specs(par, stacked)
+    return out
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    d, dt = cfg.d_model, cfg.param_dtype
+    r = cfg.n_repeats
+
+    blocks = []
+    for i, kind in enumerate(cfg.pattern):
+        ks = jax.random.split(jax.random.fold_in(keys[0], i), r)
+        blocks.append(jax.vmap(lambda k: _init_layer(k, kind, cfg))(ks))
+    tail = [_init_layer(jax.random.fold_in(keys[1], i), kind, cfg)
+            for i, kind in enumerate(cfg.tail)]
+
+    params: Dict[str, Any] = {
+        "embed": emb_lib.init_table(keys[2], cfg.vocab, d, dt),
+        "blocks": tuple(blocks),
+        "tail": tuple(tail),
+        "final_norm": rmsnorm_init(d, dt),
+        "lm_head": emb_lib.init_table(keys[3], cfg.vocab, d, dt),
+    }
+    if SHARED_ATTN in cfg.pattern + cfg.tail:
+        params["shared"] = {
+            "norm1": rmsnorm_init(d, dt),
+            "attn": attn_lib.init_attn(keys[4], d, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.hd, dt),
+            "norm2": rmsnorm_init(d, dt),
+            "mlp": mlp_init(keys[5], d, cfg.d_ff, dt),
+        }
+    if cfg.encoder_layers:
+        ks = jax.random.split(keys[6], cfg.encoder_layers)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _init_layer(k, ATTN, cfg))(ks),
+            "final_norm": rmsnorm_init(d, dt),
+        }
+    if cfg.num_image_tokens:
+        params["img_proj"] = dense_init(keys[7], (d, d), 0, dtype=dt)
+    return params
+
+
+def param_specs(cfg: ArchConfig, par: ParallelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": par.w_vocab(),
+        "blocks": tuple(_layer_specs(k, cfg, par, True)
+                        for k in cfg.pattern),
+        "tail": tuple(_layer_specs(k, cfg, par, False) for k in cfg.tail),
+        "final_norm": (),
+        "lm_head": par.w_vocab(),
+    }
+    if SHARED_ATTN in cfg.pattern + cfg.tail:
+        specs["shared"] = {
+            "norm1": (), "attn": attn_lib.attn_specs(par, False),
+            "norm2": (), "mlp": mlp_specs(par, False),
+        }
+    if cfg.encoder_layers:
+        specs["encoder"] = {"blocks": _layer_specs(ATTN, cfg, par, True),
+                            "final_norm": ()}
+    if cfg.num_image_tokens:
+        specs["img_proj"] = (par.fsdp_axis(),
+                             par.model_axis if par.active else None)
+    return specs
+
+
+# ============================================================ train/forward
+
+def _attn_kwargs(cfg: ArchConfig, par: ParallelConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                rope_theta=cfg.rope_theta, chunk_q=par.attn_chunk_q,
+                chunk_k=par.attn_chunk_k, remat_qchunk=par.attn_remat,
+                probs_bf16=par.attn_probs_bf16, par=par)
+
+
+def _apply_layer_train(kind: str, lp, h, positions, cfg, par, memory,
+                       shared, causal: bool = True):
+    eps = cfg.norm_eps
+    aux = jnp.float32(0)
+    p = shared if kind == SHARED_ATTN else lp
+    if kind in (ATTN, SWA, MOE, CROSS, SHARED_ATTN):
+        window = cfg.sliding_window if kind == SWA else 0
+        a = attn_lib.self_attention(
+            p["attn"], rmsnorm(h, p["norm1"], eps), positions,
+            causal=causal, window=window, **_attn_kwargs(cfg, par))
+        h = h + a
+        if kind == CROSS:
+            x = attn_lib.self_attention(
+                lp["xattn"], rmsnorm(h, lp["normx"], eps), positions,
+                causal=False, memory=memory, **_attn_kwargs(cfg, par))
+            h = h + x
+        h2 = rmsnorm(h, p["norm2"], eps)
+        if kind == MOE:
+            mo, aux = moe_lib.moe_apply(
+                lp["moe"], h2, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act, par=par)
+            h = h + mo
+        else:
+            h = h + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    elif kind == MAMBA1:
+        s = cfg.ssm
+        y = ssm_lib.mamba1_block(
+            lp["mixer"], rmsnorm(h, lp["norm1"], eps), d_state=s.d_state,
+            chunk=s.chunk, dt_rank=s.dt_rank or -(-cfg.d_model // 16),
+            remat=par.ssm_remat)
+        h = h + y
+    elif kind == MAMBA2:
+        s = cfg.ssm
+        y = ssm_lib.mamba2_block(
+            lp["mixer"], rmsnorm(h, lp["norm1"], eps), d_state=s.d_state,
+            head_dim=s.head_dim, chunk=s.chunk, norm_eps=eps,
+            remat=par.ssm_remat)
+        h = h + y
+    else:
+        raise ValueError(kind)
+    return h, aux
+
+
+def _encode(params, frames, cfg, par):
+    """Whisper-style bidirectional encoder over stub frame embeddings."""
+    h = frames.astype(cfg.param_dtype)
+    pos = jnp.arange(h.shape[1], dtype=jnp.int32)
+
+    def body(hh, bp):
+        hh, _ = _apply_layer_train(ATTN, bp, hh, pos, cfg, par, None, None,
+                                   causal=False)
+        return par.shard_activations(hh), None
+
+    if par.remat == "block":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["blocks"])
+    return rmsnorm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _memory(params, batch, cfg, par):
+    if cfg.encoder_layers:
+        return _encode(params, batch["frames"], cfg, par)
+    if cfg.num_image_tokens:
+        img = batch["image_embeds"].astype(cfg.param_dtype)
+        return par.shard_activations(img @ params["img_proj"])
+    return None
+
+
+def _backbone(params, h, positions, cfg, par, memory):
+    """Scan the block pattern + tail. h: (B, S, D) -> (h, aux_sum)."""
+    shared = params.get("shared")
+
+    def body(hh, bps):
+        aux = jnp.float32(0)
+        for i, kind in enumerate(cfg.pattern):
+            hh, a = _apply_layer_train(kind, bps[i], hh, positions, cfg,
+                                       par, memory, shared)
+            aux += a
+        return par.shard_activations(hh), aux
+
+    if par.remat == "block":
+        body = jax.checkpoint(body)
+    h, auxs = jax.lax.scan(body, h, params["blocks"])
+    aux = jnp.sum(auxs)
+    for i, kind in enumerate(cfg.tail):
+        h, a = _apply_layer_train(kind, params["tail"][i], h, positions,
+                                  cfg, par, memory, shared)
+        aux += a
+    return par.shard_activations(h), aux
+
+
+def forward_train(params, batch, cfg: ArchConfig, par: ParallelConfig):
+    """batch: tokens (B,S), labels (B,S) [+frames/image_embeds]."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = emb_lib.embed(params["embed"], tokens, par)
+    h = par.shard_activations(h)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    memory = _memory(params, batch, cfg, par)
+    h, aux = _backbone(params, h, positions, cfg, par, memory)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    loss = emb_lib.softmax_xent(params["lm_head"], h, batch["labels"], par,
+                                chunk=par.logits_chunk)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+def forward_embed(params, batch, cfg: ArchConfig, par: ParallelConfig):
+    """Mean-pooled final-hidden embedding (the retrieval encoder path).
+
+    Returns (B, D) f32, L2-normalized — the vectors the Hybrid LSH
+    index stores/queries in serve.retrieval.
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = emb_lib.embed(params["embed"], tokens, par)
+    h = par.shard_activations(h)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    memory = _memory(params, batch, cfg, par)
+    h, _ = _backbone(params, h, positions, cfg, par, memory)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    emb = jnp.mean(h.astype(jnp.float32), axis=1)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True),
+                             1e-9)
+
+
+# =============================================================== caches
+
+def _cache_for(kind: str, cfg: ArchConfig, b: int, cache_len: int,
+               memory_len: int, stacked_r: int, par: ParallelConfig):
+    """ShapeDtype template of one pattern position's decode cache."""
+    dt = cfg.param_dtype
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+
+    def z(*shape, dtype=dt):
+        lead = (stacked_r,) if stacked_r else ()
+        return jnp.zeros(lead + shape, dtype)
+
+    if kind in (ATTN, MOE, SHARED_ATTN, CROSS):
+        c = {"k": z(b, cache_len, hkv, hd), "v": z(b, cache_len, hkv, hd)}
+        if kind == CROSS:
+            c["mem_k"] = z(b, memory_len, hkv, hd)
+            c["mem_v"] = z(b, memory_len, hkv, hd)
+        return c
+    if kind == SWA:
+        w = min(cfg.sliding_window, cache_len)
+        return {"k": z(b, w, hkv, hd), "v": z(b, w, hkv, hd)}
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    conv_ch = di if kind == MAMBA1 else di + 2 * s.d_state
+    nh = di // s.head_dim
+    ssm_state = ((b, di, s.d_state) if kind == MAMBA1
+                 else (b, nh, s.head_dim, s.d_state))
+    return {"conv": z(b, s.d_conv - 1, conv_ch),
+            "ssm": z(*ssm_state, dtype=jnp.float32)}
+
+
+def init_caches(cfg: ArchConfig, b: int, cache_len: int,
+                par: ParallelConfig, memory_len: int = 0):
+    r = cfg.n_repeats
+    return {
+        "blocks": tuple(_cache_for(k, cfg, b, cache_len, memory_len, r, par)
+                        for k in cfg.pattern),
+        "tail": tuple(_cache_for(k, cfg, b, cache_len, memory_len, 0, par)
+                      for k in cfg.tail),
+    }
+
+
+def cache_specs(cfg: ArchConfig, par: ParallelConfig):
+    """PartitionSpec pytree matching init_caches output."""
+    if not par.active:
+        return jax.tree_util.tree_map(lambda _: (), init_specs_placeholder())
+
+    batch = par.batch()
+    seqax = par.decode_seq_shard or None
+
+    def spec_for(kind, stacked):
+        st = (None,) if stacked else ()
+        if kind in (ATTN, MOE, SHARED_ATTN, CROSS):
+            if par.decode_kv_head_shard:
+                kv = st + (batch, None, par.model_axis, None)
+            else:
+                kv = st + (batch, seqax, None, None)
+            c = {"k": kv, "v": kv}
+            if kind == CROSS:
+                c["mem_k"] = st + (batch, None, None, None)
+                c["mem_v"] = st + (batch, None, None, None)
+            return c
+        if kind == SWA:
+            kv = st + (batch, None, None, None)
+            return {"k": kv, "v": kv}
+        ma = par.model_axis
+        if kind == MAMBA1:
+            return {"conv": st + (batch, None, ma),
+                    "ssm": st + (batch, ma, None)}
+        return {"conv": st + (batch, None, ma),
+                "ssm": st + (batch, ma, None, None)}
+
+    return {
+        "blocks": tuple(spec_for(k, True) for k in cfg.pattern),
+        "tail": tuple(spec_for(k, False) for k in cfg.tail),
+    }
+
+
+def init_specs_placeholder():
+    return {"blocks": (), "tail": ()}
+
+
+# ============================================================== prefill
+
+def _prefill_layer(kind, lp, h, positions, cfg, par, memory, shared,
+                   cache_len):
+    """Apply layer and emit its decode cache."""
+    eps = cfg.norm_eps
+    b, s, _ = h.shape
+    p = shared if kind == SHARED_ATTN else lp
+    cache = {}
+    if kind in (ATTN, SWA, MOE, CROSS, SHARED_ATTN):
+        window = cfg.sliding_window if kind == SWA else 0
+        a, k, v = attn_lib.self_attention(
+            p["attn"], rmsnorm(h, p["norm1"], eps), positions,
+            causal=True, window=window, return_kv=True,
+            **_attn_kwargs(cfg, par))
+        h = h + a
+        if kind == SWA:
+            w = min(cfg.sliding_window, cache_len)
+            kw, vw = k[:, s - w:], v[:, s - w:]
+            slots = (positions[0, s - w:] % w)
+            ck = jnp.zeros((b, w) + k.shape[2:], k.dtype)
+            cache = {"k": ck.at[:, slots].set(kw),
+                     "v": ck.at[:, slots].set(vw)}
+        else:
+            ck = jnp.zeros((b, cache_len) + k.shape[2:], k.dtype)
+            cache = {"k": jax.lax.dynamic_update_slice(
+                         ck, k, (0, 0, 0, 0)),
+                     "v": jax.lax.dynamic_update_slice(
+                         ck, v, (0, 0, 0, 0))}
+        if kind == CROSS:
+            x, mk, mv = attn_lib.self_attention(
+                lp["xattn"], rmsnorm(h, lp["normx"], eps), positions,
+                causal=False, memory=memory, return_kv=True,
+                **_attn_kwargs(cfg, par))
+            h = h + x
+            cache["mem_k"], cache["mem_v"] = mk, mv
+        h2 = rmsnorm(h, p["norm2"], eps)
+        if kind == MOE:
+            mo, _ = moe_lib.moe_apply(
+                lp["moe"], h2, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act, par=par)
+            h = h + mo
+        else:
+            h = h + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+    elif kind in (MAMBA1, MAMBA2):
+        s_ = cfg.ssm
+        if kind == MAMBA1:
+            y, state = ssm_lib.mamba1_block(
+                lp["mixer"], rmsnorm(h, lp["norm1"], eps),
+                d_state=s_.d_state, chunk=s_.chunk,
+                dt_rank=s_.dt_rank or -(-cfg.d_model // 16),
+                return_state=True)
+        else:
+            y, state = ssm_lib.mamba2_block(
+                lp["mixer"], rmsnorm(h, lp["norm1"], eps),
+                d_state=s_.d_state, head_dim=s_.head_dim, chunk=s_.chunk,
+                norm_eps=eps, return_state=True)
+        h = h + y
+        cache = state
+    return h, cache
+
+
+def prefill(params, batch, cfg: ArchConfig, par: ParallelConfig,
+            cache_len: int):
+    """Process the prompt, build decode caches.
+
+    Returns (h_last (B, D), caches, lengths (B,)).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = emb_lib.embed(params["embed"], tokens, par)
+    h = par.shard_activations(h)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    memory = _memory(params, batch, cfg, par)
+    shared = params.get("shared")
+
+    def body(hh, bps):
+        caches = []
+        for i, kind in enumerate(cfg.pattern):
+            hh, c = _prefill_layer(kind, bps[i], hh, positions, cfg, par,
+                                   memory, shared, cache_len)
+            caches.append(c)
+        return par.shard_activations(hh), tuple(caches)
+
+    h, block_caches = jax.lax.scan(body, h, params["blocks"])
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail):
+        h, c = _prefill_layer(kind, params["tail"][i], h, positions, cfg,
+                              par, memory, shared, cache_len)
+        tail_caches.append(c)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return (h[:, -1], {"blocks": block_caches, "tail": tuple(tail_caches)},
+            lengths)
+
+
+# =============================================================== decode
+
+def _decode_layer(kind, lp, h, cache, lengths, cfg, par, shared):
+    eps = cfg.norm_eps
+    p = shared if kind == SHARED_ATTN else lp
+    if kind in (ATTN, SWA, MOE, CROSS, SHARED_ATTN):
+        window = cfg.sliding_window if kind == SWA else 0
+        out, new_sa = attn_lib.decode_self_attention(
+            p["attn"], rmsnorm(h, p["norm1"], eps), cache, lengths,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+            rope_theta=cfg.rope_theta, par=par,
+            seq_axes=() if kind == SWA else par.decode_seq_shard,
+            window=window)
+        h = h + out
+        new_cache = dict(cache)
+        new_cache.update(new_sa)
+        if kind == CROSS:
+            x = attn_lib.decode_cross_attention(
+                lp["xattn"], rmsnorm(h, lp["normx"], eps),
+                {"k": cache["mem_k"], "v": cache["mem_v"]},
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd)
+            h = h + x
+        h2 = rmsnorm(h, p["norm2"], eps)
+        if kind == MOE:
+            mo, _ = moe_lib.moe_apply(
+                lp["moe"], h2[:, None], top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act, par=par)
+            h = h + mo[:, 0]
+        else:
+            h = h + mlp_apply(p["mlp"], h2, cfg.mlp_act)
+        return h, new_cache
+    s_ = cfg.ssm
+    if kind == MAMBA1:
+        y, st = ssm_lib.mamba1_decode(
+            lp["mixer"], rmsnorm(h, lp["norm1"], eps), cache,
+            d_state=s_.d_state,
+            dt_rank=s_.dt_rank or -(-cfg.d_model // 16))
+    else:
+        y, st = ssm_lib.mamba2_decode(
+            lp["mixer"], rmsnorm(h, lp["norm1"], eps), cache,
+            d_state=s_.d_state, head_dim=s_.head_dim, norm_eps=eps)
+    return h + y, st
+
+
+def decode_step(params, caches, token: jax.Array, lengths: jax.Array,
+                cfg: ArchConfig, par: ParallelConfig):
+    """One token for the whole batch.  token: (B,) -> (h_last, caches)."""
+    h = emb_lib.embed(params["embed"], token[:, None], par)[:, 0]
+    shared = params.get("shared")
+    r = cfg.n_repeats
+
+    def body(i, carry):
+        h, bc = carry
+        take = functools.partial(jax.lax.dynamic_index_in_dim, index=i,
+                                 axis=0, keepdims=False)
+        new_caches = []
+        for pos, kind in enumerate(cfg.pattern):
+            lp = jax.tree_util.tree_map(take, params["blocks"][pos])
+            cache = jax.tree_util.tree_map(take, bc[pos])
+            h, nc = _decode_layer(kind, lp, h, cache, lengths, cfg, par,
+                                  shared)
+            new_caches.append(nc)
+        put = lambda full, new: jax.lax.dynamic_update_index_in_dim(
+            full, new.astype(full.dtype), i, 0)
+        bc = tuple(jax.tree_util.tree_map(put, bc[pos], new_caches[pos])
+                   for pos in range(len(cfg.pattern)))
+        return (h, bc)
+
+    h, block_caches = jax.lax.fori_loop(
+        0, r, body, (h, tuple(caches["blocks"])))
+
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail):
+        h, nc = _decode_layer(kind, params["tail"][i], h,
+                              caches["tail"][i], lengths, cfg, par, shared)
+        tail_caches.append(nc)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, {"blocks": block_caches, "tail": tuple(tail_caches)}

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamWConfig, init as adamw_init, update as adamw_update
+from repro.optim.clipping import clip_by_global_norm, global_norm
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "global_norm", "warmup_cosine"]

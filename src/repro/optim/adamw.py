@@ -1,0 +1,50 @@
+"""AdamW with bf16 params / f32 moments, built from scratch (no optax).
+
+``update`` is pure and jit-safe; moments are stored in f32 regardless of
+parameter dtype (mixed-precision training convention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, opt_state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_opt_state)."""
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    tmap = jax.tree_util.tree_map
+    new_m = tmap(lambda g, m: cfg.b1 * m + (1 - cfg.b1) * g.astype(
+        jnp.float32), grads, opt_state["m"])
+    new_v = tmap(lambda g, v: cfg.b2 * v + (1 - cfg.b2) * jnp.square(
+        g.astype(jnp.float32)), grads, opt_state["v"])
+
+    def upd(p, m, v):
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * ((m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf.astype(p.dtype)
+
+    new_params = tmap(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "step": step}

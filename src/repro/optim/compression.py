@@ -1,0 +1,62 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 512+ chips the slow links are the cross-pod ones; we compress the
+pod-axis gradient reduction to int8 with per-tensor dynamic scale and
+error feedback (residual carried to the next step), a standard
+distributed-optimization trick (1-bit Adam / EF-SGD family).
+
+``compressed_psum_tree`` is the raw collective (call inside shard_map
+with the reduction axis manual); ``apply_ef`` wraps quantize->psum->
+dequantize with the EF residual state.  Correctness is validated in
+tests/test_distributed.py on an 8-device subprocess mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array, axes) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 with a pmax-shared scale."""
+    xf = x.astype(jnp.float32)
+    local_amax = jnp.max(jnp.abs(xf))
+    amax = jax.lax.pmax(local_amax, axes)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(x: jax.Array, axes, n_shards: int) -> jax.Array:
+    """Mean over ``axes`` of x, int8 on the wire. Call inside shard_map."""
+    q, scale = _quantize(x, axes)
+    s = jax.lax.psum(q.astype(jnp.int32), axes)
+    return (s.astype(jnp.float32) * scale / n_shards).astype(x.dtype)
+
+
+def apply_ef(grads, ef_state, axes, n_shards: int):
+    """Error-feedback compressed mean-reduction over ``axes``.
+
+    grads/ef_state: matching pytrees (ef f32).  Returns (reduced_grads,
+    new_ef_state).  The residual (g + e) - dequant(q) stays local.
+    """
+    def reduced(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize(corrected, axes)
+        s = jax.lax.psum(q.astype(jnp.int32), axes)
+        return (s.astype(jnp.float32) * scale / n_shards).astype(g.dtype)
+
+    def residual(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = _quantize(corrected, axes)
+        return corrected - q.astype(jnp.float32) * scale
+
+    red = jax.tree_util.tree_map(reduced, grads, ef_state)
+    ef = jax.tree_util.tree_map(residual, grads, ef_state)
+    return red, ef
+
+
+def init_ef(params) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

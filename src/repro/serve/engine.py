@@ -1,0 +1,57 @@
+"""Serving engine: prefill/decode step factories + generation loop.
+
+``make_serve_prefill`` / ``make_serve_step`` produce the pure functions
+the dry-run lowers for the inference cells (prefill_32k lowers the
+prefill; decode_32k / long_500k lower one serve_step = one new token
+for the whole batch against the KV caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, prefill
+from repro.models.embedding import greedy_sample
+from repro.models.parallel import ParallelConfig
+
+
+def make_serve_prefill(cfg: ArchConfig, par: ParallelConfig,
+                       cache_len: int):
+    def serve_prefill(params, batch):
+        h_last, caches, lengths = prefill(params, batch, cfg, par,
+                                          cache_len)
+        token = greedy_sample(params["lm_head"], h_last, par)
+        return token, caches, lengths
+    return serve_prefill
+
+
+def make_serve_step(cfg: ArchConfig, par: ParallelConfig):
+    def serve_step(params, caches, token, lengths):
+        h_last, caches = decode_step(params, caches, token, lengths, cfg,
+                                     par)
+        nxt = greedy_sample(params["lm_head"], h_last, par)
+        return nxt, caches, lengths + 1
+    return serve_step
+
+
+def generate(params, batch, cfg: ArchConfig, par: ParallelConfig, *,
+             cache_len: int, max_new_tokens: int,
+             eos_id: Optional[int] = None) -> jax.Array:
+    """Greedy generation for a batch of equal-length prompts.
+
+    Returns (B, max_new_tokens) int32.
+    """
+    pre = jax.jit(make_serve_prefill(cfg, par, cache_len))
+    step = jax.jit(make_serve_step(cfg, par), donate_argnums=1)
+    token, caches, lengths = pre(params, batch)
+    out = [token]
+    for _ in range(max_new_tokens - 1):
+        token, caches, lengths = step(params, caches, token, lengths)
+        out.append(token)
+        if eos_id is not None and bool(jnp.all(token == eos_id)):
+            break
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,80 @@
+"""Retrieval-augmented serving: the paper's index as a first-class
+feature of the serving path.
+
+An LM (any of the 10 archs) encodes requests to normalized embeddings
+(models.transformer.forward_embed); the corpus embeddings live in a
+HybridLSHIndex (cosine/SimHash by default).  Every retrieval request
+goes through the paper's Algorithm 2: estimate LSHCost from bucket
+sizes + merged HLLs, then run LSH-based or linear search per query
+group.  ``stats`` exposes the routing decisions for observability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import CostModel, HybridLSHIndex
+from repro.core.lsh import make_family
+from repro.models.parallel import ParallelConfig
+from repro.models.transformer import forward_embed
+
+
+@dataclasses.dataclass
+class RetrievalConfig:
+    radius: float = 0.3            # cosine distance threshold
+    tables: int = 20               # L
+    num_buckets: int = 4096
+    hll_m: int = 64
+    cap: int = 128
+    beta_over_alpha: float = 10.0
+    delta: float = 0.1
+
+
+class RetrievalService:
+    """Embed-and-report-near-neighbors service."""
+
+    def __init__(self, cfg: ArchConfig, par: ParallelConfig, params,
+                 rcfg: RetrievalConfig = RetrievalConfig()):
+        self.cfg, self.par, self.params, self.rcfg = cfg, par, params, rcfg
+        self._embed = jax.jit(
+            lambda p, b: forward_embed(p, b, cfg, par))
+        self.index: Optional[HybridLSHIndex] = None
+        self._queries_served = 0
+        self._linear_served = 0
+
+    def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        return self._embed(self.params, batch)
+
+    def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
+        embs = [np.asarray(self.embed(b)) for b in batches]
+        corpus = jnp.asarray(np.concatenate(embs, axis=0))
+        r = self.rcfg
+        fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
+                          r=r.radius, delta=r.delta)
+        self.index = HybridLSHIndex(
+            fam, num_buckets=r.num_buckets, m=r.hll_m, cap=r.cap,
+            cost_model=CostModel(alpha=1.0, beta=r.beta_over_alpha))
+        self.index.build(corpus)
+        return corpus.shape[0]
+
+    def query(self, batch: Dict[str, jax.Array],
+              radius: Optional[float] = None):
+        """Returns (QueryResult, embeddings)."""
+        assert self.index is not None, "call index_corpus first"
+        q = self.embed(batch)
+        res = self.index.query(q, radius or self.rcfg.radius)
+        self._queries_served += res.n_queries
+        self._linear_served += int(res.frac_linear * res.n_queries)
+        return res, q
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        served = max(self._queries_served, 1)
+        return {"queries": self._queries_served,
+                "frac_linear": self._linear_served / served,
+                "index_size": self.index.n if self.index else 0}

@@ -1,0 +1,57 @@
+"""Request scheduler: shape-bucketed batching with hybrid routing.
+
+TPU serving wants a small set of compiled shapes.  The scheduler
+accumulates requests, forms batches padded to power-of-two sizes
+(bounded jit-cache churn), and — for retrieval requests — consults the
+paper's cost estimator FIRST so that a micro-batch executes a single
+strategy (per-query lax.cond would run both branches densely on TPU;
+see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.router import partition_indices
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    payload: Any
+
+
+class ShapeBucketScheduler:
+    def __init__(self, max_batch: int = 64, min_bucket: int = 8):
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        self.queue: List[Request] = []
+        self._uid = 0
+
+    def submit(self, payload) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, payload))
+        return self._uid
+
+    def _bucket(self, k: int) -> int:
+        if k == 0:
+            return 0
+        return min(self.max_batch,
+                   max(self.min_bucket, 1 << (k - 1).bit_length()))
+
+    def next_batch(self) -> Tuple[List[Request], int]:
+        """Pop up to max_batch requests; returns (requests, padded_size).
+
+        Padded size is the pow2 bucket: the runner repeats the last
+        payload to fill and drops the padded results.
+        """
+        take = self.queue[:self.max_batch]
+        self.queue = self.queue[len(take):]
+        return take, self._bucket(len(take))
+
+
+def route_and_group(estimates_use_lsh: np.ndarray, min_bucket: int = 8):
+    """Split a retrieval batch into per-strategy index groups (padded)."""
+    return partition_indices(estimates_use_lsh, minimum=min_bucket)

@@ -1,0 +1,8 @@
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import (TrainConfig, batch_specs, init_state,
+                              make_jitted_train_step, make_train_step,
+                              state_specs)
+
+__all__ = ["LoopConfig", "train_loop", "TrainConfig", "batch_specs",
+           "init_state", "make_jitted_train_step", "make_train_step",
+           "state_specs"]

@@ -1,0 +1,103 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * restore-from-latest-committed checkpoint on (re)start — a crashed
+    run relaunches with the same command and resumes (tested by
+    killing/restarting in tests/test_fault.py);
+  * periodic async checkpointing (two-phase commit in CheckpointManager);
+  * deterministic data resume (iterator state = step counter);
+  * straggler watchdog: per-step wall time vs a running median — slow
+    steps are logged with the step index (on a real cluster this feeds
+    the controller that evicts/replaces the slow host; here the hook
+    records them, and tests inject artificial delay);
+  * failure injection hook for tests (raise at step N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.data import LMDataIterator
+from repro.models.parallel import ParallelConfig
+from repro.train.step import (TrainConfig, init_state, make_jitted_train_step,
+                              state_specs)
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: Optional[str] = None
+    data_seed: int = 0
+    straggler_factor: float = 3.0
+
+
+def train_loop(cfg: ArchConfig, par: ParallelConfig, *, batch: int, seq: int,
+               tcfg: TrainConfig = TrainConfig(),
+               lcfg: LoopConfig = LoopConfig(),
+               failure_injector: Optional[Callable[[int], None]] = None,
+               step_delay_injector: Optional[Callable[[int], float]] = None,
+               ) -> Dict[str, list]:
+    """Returns history dict (loss per logged step, straggler events)."""
+    step_fn = make_jitted_train_step(cfg, par, tcfg)
+    data = LMDataIterator(seed=lcfg.data_seed, batch=batch, seq=seq,
+                          vocab=cfg.vocab, cfg=cfg)
+
+    mgr = CheckpointManager(lcfg.ckpt_dir) if lcfg.ckpt_dir else None
+    state = init_state(cfg, jax.random.PRNGKey(0), tcfg)
+    start_step = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, ck_step = mgr.restore({"state": state,
+                                         "data": data.state_dict()})
+        state = restored["state"]
+        data.load_state_dict(restored["data"])
+        start_step = ck_step
+        log.info("restored checkpoint at step %d", start_step)
+
+    if par.active:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        shardings = jax.tree_util.tree_map(
+            lambda a, s: NamedSharding(par.mesh, P(*s)), state,
+            state_specs(cfg, par, tcfg))
+        state = jax.tree_util.tree_map(jax.device_put, state, shardings)
+
+    history = {"loss": [], "step": [], "stragglers": []}
+    times = []
+    for step in range(start_step, lcfg.steps):
+        if failure_injector is not None:
+            failure_injector(step)
+        batch_data = next(data)
+        t0 = time.perf_counter()
+        if step_delay_injector is not None:
+            # inside the timed region: simulates a slow (straggler) step
+            time.sleep(step_delay_injector(step))
+        state, metrics = step_fn(state, batch_data)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        med = float(np.median(times[-20:]))
+        if len(times) > 5 and dt > lcfg.straggler_factor * med:
+            history["stragglers"].append((step, dt, med))
+            log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                        step, dt, med)
+        if step % lcfg.log_every == 0 or step == lcfg.steps - 1:
+            history["loss"].append(float(metrics["loss"]))
+            history["step"].append(step)
+            log.info("step %d loss %.4f grad_norm %.3f", step,
+                     float(metrics["loss"]), float(metrics["grad_norm"]))
+        if mgr is not None and (step + 1) % lcfg.ckpt_every == 0:
+            mgr.save(step + 1, {"state": state, "data": data.state_dict()})
+    if mgr is not None:
+        mgr.save(lcfg.steps, {"state": state, "data": data.state_dict()},
+                 blocking=True)
+    return history

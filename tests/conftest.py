@@ -1,0 +1,7 @@
+import os
+import sys
+
+# src-layout import without install; single real CPU device (the
+# 512-device XLA flag belongs ONLY to launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,86 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs ref oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _pts(n, d, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=(n, d)).astype(dtype))
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1", "cosine"])
+@pytest.mark.parametrize("shape", [(8, 16, 7), (100, 130, 70),
+                                   (128, 256, 128), (33, 257, 129)])
+def test_distance_kernels_match_ref(metric, shape):
+    q, n, d = shape
+    qa, xa = _pts(q, d), _pts(n, d)
+    a = ops.pairwise_dist(qa, xa, metric, impl="pallas_interpret")
+    b = ops.pairwise_dist(qa, xa, metric, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_distance_kernel_dtypes(dtype):
+    qa, xa = _pts(16, 32, dtype), _pts(64, 32, dtype)
+    a = ops.pairwise_dist(qa, xa, "l2", impl="pallas_interpret")
+    b = ops.pairwise_dist(qa, xa, "l2", impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(4, 10, 1), (60, 200, 2), (128, 128, 8)])
+def test_hamming_kernel_exact(shape):
+    q, n, w = shape
+    qc = jnp.asarray(RNG.integers(0, 2**32, (q, w), dtype=np.uint32))
+    xc = jnp.asarray(RNG.integers(0, 2**32, (n, w), dtype=np.uint32))
+    a = ops.hamming_dist(qc, xc, impl="pallas_interpret")
+    b = ops.hamming_dist(qc, xc, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # cross-check against numpy bit counting
+    qa, xa = np.asarray(qc), np.asarray(xc)
+    expect = np.zeros((q, n), np.int64)
+    for i in range(q):
+        x = qa[i][None] ^ xa
+        expect[i] = np.unpackbits(x.view(np.uint8), axis=1).sum(1)
+    np.testing.assert_array_equal(np.asarray(a), expect)
+
+
+@pytest.mark.parametrize("L,k", [(3, 8), (5, 31), (2, 32), (4, 40), (1, 64)])
+def test_simhash_kernel_exact(L, k):
+    x = _pts(130, 48)
+    r = _pts(48, L * k)
+    a = ops.simhash_fingerprint(x, r, L=L, k=k, impl="pallas_interpret")
+    b = ops.simhash_fingerprint(x, r, L=L, k=k, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (130, L, (k + 31) // 32)
+
+
+def test_simhash_matches_family_packing():
+    """Kernel fingerprints == families.SimHash.codes bit-for-bit."""
+    from repro.core.lsh import SimHash
+    fam = SimHash(d=32, L=4, k=17)
+    params = fam.init(jax.random.PRNGKey(1))
+    x = _pts(64, 32)
+    a = fam.codes(params, x)
+    b = ops.simhash_fingerprint(x, params["R"], L=4, k=17, impl="ref")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("q,L,m", [(8, 3, 32), (64, 20, 128), (5, 1, 64)])
+def test_hll_merge_kernel(q, L, m):
+    regs = jnp.asarray(RNG.integers(0, 25, (q, L, m)).astype(np.uint8))
+    a = ops.hll_merge_estimate(regs, impl="pallas_interpret")
+    b = ops.hll_merge_estimate(regs, impl="ref")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_l2_transform_threshold():
+    """ops returns squared L2; radius transform must square r."""
+    assert ops.metric_radius_transform("l2", 3.0) == 9.0
+    assert ops.metric_radius_transform("cosine", 0.5) == 0.5

@@ -1,0 +1,121 @@
+"""LSH families + CSR tables: collision probabilities, invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import (BitSampling, PStableL1, PStableL2, SimHash,
+                            build_tables, bucket_counts, gather_candidates,
+                            gather_registers, k_from_delta, make_family)
+
+
+def test_k_from_delta_monotone():
+    ks = [k_from_delta(p1, 50, 0.1) for p1 in (0.99, 0.9, 0.8, 0.6)]
+    assert ks == sorted(ks, reverse=True)
+    for p1, k in zip((0.99, 0.9, 0.8, 0.6), ks):
+        # paper/E2LSH use ceil, which trades a bit of recall for speed;
+        # the floor value k-1 must satisfy the (1-p1^k)^L <= delta bound.
+        assert (1 - p1 ** (k - 1)) ** 50 <= 0.1 + 1e-12
+
+
+def test_simhash_collision_probability():
+    """Empirical 1-bit collision rate ~= 1 - theta/pi."""
+    d, n = 64, 4000
+    fam = SimHash(d=d, L=1, k=1)
+    params = fam.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    # construct pairs at a known angle
+    for target_cos in (0.9, 0.5):
+        noise = rng.normal(size=(n, d)).astype(np.float32)
+        noise -= (noise * x).sum(1, keepdims=True) * x
+        noise /= np.linalg.norm(noise, axis=1, keepdims=True)
+        y = target_cos * x + np.sqrt(1 - target_cos**2) * noise
+        cx = np.asarray(fam.codes(params, jnp.asarray(x)))[:, 0, 0] & 1
+        cy = np.asarray(fam.codes(params, jnp.asarray(y)))[:, 0, 0] & 1
+        emp = float((cx == cy).mean())
+        theo = fam.p1(1.0 - target_cos)
+        assert abs(emp - theo) < 0.05, (target_cos, emp, theo)
+
+
+@pytest.mark.parametrize("metric,cls", [("l2", PStableL2), ("l1", PStableL1)])
+def test_pstable_p1_in_range_and_monotone(metric, cls):
+    fam = make_family(metric, d=16, L=5, r=1.0)
+    assert isinstance(fam, cls)
+    ps = [fam.p1(r) for r in (0.25, 0.5, 1.0, 2.0, 4.0)]
+    assert all(0 < p < 1 for p in ps)
+    assert ps == sorted(ps, reverse=True)  # farther -> less likely
+
+
+def test_bitsampling_p1():
+    fam = BitSampling(dim_bits=64, L=2, k=4)
+    assert fam.p1(0) == 1.0
+    assert abs(fam.p1(16) - 0.75) < 1e-12
+
+
+def _build(n=2000, d=8, L=4, B=64, m=32, seed=0):
+    fam = make_family("l2", d=d, L=L, r=1.0)
+    params = fam.init(jax.random.PRNGKey(seed))
+    x = jnp.asarray(np.random.default_rng(seed).normal(
+        size=(n, d)).astype(np.float32))
+    bids = fam.bucket_ids(params, x, B)
+    tables = build_tables(jnp.arange(n, dtype=jnp.int32), bids, B, m)
+    return fam, params, x, bids, tables
+
+
+def test_csr_invariants():
+    n, B = 2000, 64
+    fam, params, x, bids, tables = _build(n=n, B=B)
+    starts = np.asarray(tables.starts)
+    perm = np.asarray(tables.perm)
+    bids_np = np.asarray(bids)
+    for j in range(tables.L):
+        assert starts[j, 0] == 0 and starts[j, -1] == n
+        assert np.all(np.diff(starts[j]) >= 0)
+        assert sorted(perm[j].tolist()) == list(range(n))  # permutation
+        # every point is inside its bucket's CSR range
+        for b in range(0, B, 13):
+            lo, hi = starts[j, b], starts[j, b + 1]
+            members = set(perm[j, lo:hi].tolist())
+            expect = set(np.nonzero(bids_np[:, j] == b)[0].tolist())
+            assert members == expect
+
+
+def test_bucket_counts_and_candidates():
+    n = 2000
+    fam, params, x, bids, tables = _build(n=n)
+    q = x[:10]
+    qb = fam.bucket_ids(params, q, tables.num_buckets)
+    counts = np.asarray(bucket_counts(tables, qb))
+    # self point must be among gathered candidates when cap is large
+    cands = np.asarray(gather_candidates(tables, qb, cap=512, sentinel=n))
+    for i in range(10):
+        assert i in set(cands[i].tolist())
+    # counts match the CSR sizes
+    starts = np.asarray(tables.starts)
+    for i in range(10):
+        for j in range(tables.L):
+            b = int(np.asarray(qb)[i, j])
+            assert counts[i, j] == starts[j, b + 1] - starts[j, b]
+
+
+def test_registers_gather_shape():
+    fam, params, x, bids, tables = _build()
+    qb = fam.bucket_ids(params, x[:7], tables.num_buckets)
+    regs = gather_registers(tables, qb)
+    assert regs.shape == (7, tables.L, tables.m)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(16, 128))
+def test_property_bucket_ids_in_range(L, B_pow):
+    B = 1 << int(np.log2(B_pow))
+    fam = SimHash(d=8, L=L, k=9)
+    params = fam.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(50, 8)).astype(np.float32))
+    b = np.asarray(fam.bucket_ids(params, x, B))
+    assert b.shape == (50, L)
+    assert (b >= 0).all() and (b < B).all()

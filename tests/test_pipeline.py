@@ -1,0 +1,43 @@
+"""GPipe pipeline: pipelined result == sequential stack (8-dev subprocess)."""
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    script = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed import gpipe, bubble_fraction
+
+mesh = jax.make_mesh((4, 2), ("stage", "model"))
+n_stages, n_micro, mb, d = 4, 8, 4, 16
+
+k = jax.random.PRNGKey(0)
+w = jax.random.normal(k, (n_stages, d, d)) * 0.3
+b = jax.random.normal(k, (n_stages, d)) * 0.1
+xs = jax.random.normal(jax.random.PRNGKey(1), (n_micro, mb, d))
+
+def stage_fn(p, h):
+    return jnp.tanh(h @ p["w"] + p["b"])
+
+out = jax.jit(lambda p, x: gpipe(stage_fn, p, x, mesh=mesh,
+                                 axis="stage"))({"w": w, "b": b}, xs)
+
+# sequential reference
+ref = xs
+for s in range(n_stages):
+    ref = jnp.tanh(ref @ w[s] + b[s])
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                           rtol=2e-5, atol=2e-5)
+assert abs(bubble_fraction(8, 4) - 3/11) < 1e-9
+print("PIPE_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "PIPE_OK" in out.stdout
