@@ -19,8 +19,32 @@ def main() -> None:
                     help="dataset size fraction of the paper's sizes")
     ap.add_argument("--quick", action="store_true",
                     help="tiny scale for CI (0.03)")
+    ap.add_argument("--emit", metavar="PATH", default=None,
+                    help="run the streaming benchmark and write its JSON "
+                         "(e.g. --emit BENCH_streaming.json); skips the "
+                         "paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
+
+    if args.emit:
+        from benchmarks import streaming_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = streaming_bench.main(scale, emit=args.emit)
+        print(f"streaming_insert_throughput,"
+              f"{1e6 / max(rows['insert_docs_per_s'], 1e-9):.1f},"
+              f"{rows['insert_docs_per_s']:.0f} docs/s")
+        print(f"streaming_insert_vs_rebuild,{0:.1f},"
+              f"{rows['speedup_insert_vs_rebuild']:.1f}x faster than "
+              f"full rebuild of n={rows['n']}+{rows['n_insert']}")
+        print(f"streaming_query_overhead,"
+              f"{1e6 * rows['query_batch_s_dynamic']:.1f},"
+              f"{rows['query_batch_s_dynamic'] / max(rows['query_batch_s_static'], 1e-12):.2f}x static "
+              f"(after compact: "
+              f"{rows['query_batch_s_after_compact'] / max(rows['query_batch_s_static'], 1e-12):.2f}x)")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
 
     from benchmarks import fig2_hybrid, fig3_output, kernel_bench, table1_hll
     from benchmarks import roofline_report

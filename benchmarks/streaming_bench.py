@@ -1,0 +1,102 @@
+"""Streaming index benchmark: incremental maintenance vs full rebuild.
+
+Measures, at a given ``--scale``:
+
+  * insert throughput into the delta segment (docs/s, steady state)
+  * query latency on the streamed index vs a freshly rebuilt static one
+  * the cost of keeping the corpus current: incremental insert+compact
+    vs the full ``HybridLSHIndex.build()`` the static core would need
+
+Emits a JSON blob (``--emit``) so the perf trajectory is tracked from
+this PR on.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModel, HybridLSHIndex
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import CompactionPolicy, DynamicHybridIndex
+
+
+def main(scale: float = 0.12, emit: str | None = None) -> Dict[str, float]:
+    n = max(2000, int(50000 * scale))
+    n_insert = max(256, n // 8)
+    d, L, B, m, r = 16, 8, 1024, 64, 1.2
+    rng = np.random.default_rng(0)
+    x = np.asarray(clustered_dataset(n + n_insert, d, n_clusters=32,
+                                     dense_core_frac=0.2, core_scale=0.05,
+                                     seed=0, metric="l2"),
+                   dtype=np.float32)
+    q = x[rng.integers(0, n, 64)]
+    fam = make_family("l2", d=d, L=L, r=1.0)
+
+    def build_static(rows):
+        idx = HybridLSHIndex(fam, num_buckets=B, m=m, cap=256, key=0,
+                             cost_model=CostModel(alpha=1.0, beta=10.0))
+        t0 = time.perf_counter()
+        idx.build(jnp.asarray(rows))
+        idx.query(jnp.asarray(q), r)          # warm query path
+        return idx, time.perf_counter() - t0
+
+    static, build_s = build_static(x[:n])
+
+    dyn = DynamicHybridIndex(fam, num_buckets=B, m=m, cap=256,
+                             delta_capacity=max(1024, n_insert),
+                             cost_model=CostModel(alpha=1.0, beta=10.0),
+                             policy=CompactionPolicy(delta_fill=2.0,
+                                                     tombstone_ratio=2.0),
+                             key=0)
+    dyn.build(x[:n])
+    dyn.insert(x[n:n + 64])                   # warm the insert path
+    batch = 64
+    t0 = time.perf_counter()
+    for lo in range(n + 64, n + n_insert, batch):
+        dyn.insert(x[lo:lo + batch])
+    insert_s = time.perf_counter() - t0
+    inserted = n_insert - 64
+
+    # the static core's only way to absorb those docs: full rebuild
+    _, rebuild_s = build_static(x[:n + n_insert])
+
+    def time_query(idx, iters=5):
+        idx.query(jnp.asarray(q), r)          # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            idx.query(jnp.asarray(q), r)
+        return (time.perf_counter() - t0) / iters
+
+    q_static = time_query(static)
+    q_dyn = time_query(dyn)                   # main + populated delta
+
+    t0 = time.perf_counter()
+    dyn.compact()
+    compact_s = time.perf_counter() - t0
+    q_dyn_compacted = time_query(dyn)
+
+    out = {
+        "n": n, "n_insert": inserted, "queries": 64,
+        "insert_docs_per_s": inserted / max(insert_s, 1e-9),
+        "insert_total_s": insert_s,
+        "full_rebuild_s": rebuild_s,
+        "initial_build_s": build_s,
+        "speedup_insert_vs_rebuild": rebuild_s / max(insert_s, 1e-9),
+        "query_batch_s_static": q_static,
+        "query_batch_s_dynamic": q_dyn,
+        "query_batch_s_after_compact": q_dyn_compacted,
+        "compact_s": compact_s,
+    }
+    if emit:
+        with open(emit, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

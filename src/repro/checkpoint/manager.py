@@ -130,6 +130,27 @@ class CheckpointManager:
         steps = self.committed_steps()
         return steps[-1] if steps else None
 
+    # ---------------------------------------------------- streaming index
+    def save_index(self, step: int, index, blocking: bool = True):
+        """Snapshot a streaming index's segment state.
+
+        ``index`` is any object with a ``state_dict()`` returning an
+        array pytree (``DynamicHybridIndex``); main/delta/tombstone
+        buffers land as one leaf file each under the usual atomic
+        COMMITTED protocol.
+        """
+        self.save(step, index.state_dict(), blocking=blocking)
+
+    def restore_index(self, index, step: Optional[int] = None):
+        """Restore segment state into ``index`` (constructed with the
+        same family/config as the one that saved).  Returns the step, or
+        None when no committed checkpoint exists."""
+        state, step = self.restore(index.state_dict(), step=step)
+        if state is None:
+            return None
+        index.load_state_dict(state)
+        return step
+
     def restore(self, template, step: Optional[int] = None,
                 target_shardings=None):
         """Load into the structure of ``template``.

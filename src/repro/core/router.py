@@ -20,8 +20,8 @@ from repro.core.cost_model import CostModel
 from repro.core.lsh.tables import LSHTables, bucket_counts, gather_registers
 from repro.kernels import ops
 
-__all__ = ["RouteEstimate", "estimate_routes", "partition_indices",
-           "compact_results"]
+__all__ = ["RouteEstimate", "estimate_routes", "estimate_routes_dynamic",
+           "partition_indices", "compact_results"]
 
 
 @dataclasses.dataclass
@@ -49,6 +49,46 @@ def estimate_routes(tables: LSHTables, qbuckets: jax.Array,
         collisions.astype(jnp.float32), float(n)))
     lsh_cost = cost_model.lsh_cost(collisions.astype(jnp.float32), cand_est)
     linear_cost = float(cost_model.linear_cost(n))
+    return RouteEstimate(collisions=collisions, cand_est=cand_est,
+                         lsh_cost=lsh_cost, linear_cost=linear_cost,
+                         use_lsh=lsh_cost < linear_cost)
+
+
+def estimate_routes_dynamic(tables: LSHTables, qbuckets: jax.Array,
+                            cost_model: CostModel, n_live: int, *,
+                            tomb_counts: jax.Array,
+                            delta_collisions: jax.Array,
+                            delta_distinct: jax.Array,
+                            n_scan: Optional[int] = None,
+                            impl: Optional[str] = None) -> RouteEstimate:
+    """Tombstone-corrected Algorithm 2 for the streaming index.
+
+    The main segment's CSR sizes and HLLs still include tombstoned rows
+    (both are immutable), so the estimate is corrected on the fly:
+
+      collisions = (CSR sizes - per-bucket dead counts)  [exact, main]
+                   + delta collisions                    [exact, delta]
+      candSize   = max(HLL union - dead collisions, 0)   [see CostModel
+                   + exact delta distinct                 .corrected_cand_size]
+
+    LinearCost is priced at ``n_scan`` — the rows the linear route
+    actually computes distances over (all main rows, tombstoned or not,
+    plus occupied delta slots; masking happens after the scan).  It
+    defaults to ``n_live``, which under-prices linear under heavy
+    un-compacted churn — pass the true scan size when available.
+    """
+    counts = bucket_counts(tables, qbuckets)            # (Q, L)
+    lidx = jnp.arange(tables.L)[None, :]
+    dead = tomb_counts[lidx, qbuckets.astype(jnp.int32)]  # (Q, L)
+    collisions = jnp.sum(counts - dead, axis=-1) + delta_collisions
+    regs = gather_registers(tables, qbuckets)           # (Q, L, m)
+    cand_main = ops.hll_merge_estimate(regs, impl=impl)  # (Q,)
+    cand_est = cost_model.corrected_cand_size(
+        cand_main, jnp.sum(dead, axis=-1), delta_distinct, collisions,
+        n_live)
+    lsh_cost = cost_model.lsh_cost(collisions.astype(jnp.float32), cand_est)
+    linear_cost = float(cost_model.linear_cost(
+        n_live if n_scan is None else n_scan))
     return RouteEstimate(collisions=collisions, cand_est=cand_est,
                          lsh_cost=lsh_cost, linear_cost=linear_cost,
                          use_lsh=lsh_cost < linear_cost)

@@ -67,19 +67,35 @@ def dedupe_sorted(cands: jax.Array, sentinel: int) -> Tuple[jax.Array, jax.Array
     return s, first & (s < sentinel)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "impl"))
+@functools.partial(jax.jit, static_argnames=("metric", "impl", "q_chunk"))
 def linear_search(x: jax.Array, q: jax.Array, r: float, metric: str,
-                  impl: str | None = None):
-    """Brute-force scan. Returns (ids (Q,n), dists (Q,n), mask (Q,n))."""
-    if metric == "hamming":
-        dists = ops.hamming_dist(q, x, impl=impl).astype(jnp.float32)
-    else:
-        dists = ops.pairwise_dist(q, x, metric, impl=impl)
+                  impl: str | None = None, q_chunk: int = 32):
+    """Brute-force scan. Returns (ids (Q,n), dists (Q,n), mask (Q,n)).
+
+    Queries are processed in chunks of ``q_chunk`` (mirroring
+    ``lsh_search``) so the kernel's intermediate working set stays
+    bounded on large corpora; the (Q, n) result buffers are the
+    reporting contract and are unchanged.
+    """
     thresh = ops.metric_radius_transform(metric, r)
-    mask = dists <= thresh
-    ids = jnp.broadcast_to(jnp.arange(x.shape[0], dtype=jnp.int32),
-                           dists.shape)
-    return ids, dists, mask
+    n = x.shape[0]
+
+    def chunk_fn(qq):
+        if metric == "hamming":
+            dists = ops.hamming_dist(qq, x, impl=impl).astype(jnp.float32)
+        else:
+            dists = ops.pairwise_dist(qq, x, metric, impl=impl)
+        mask = dists <= thresh
+        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), dists.shape)
+        return ids, dists, mask
+
+    nq = q.shape[0]
+    if q_chunk and nq % q_chunk == 0 and nq > q_chunk:
+        q_r = q.reshape(nq // q_chunk, q_chunk, *q.shape[1:])
+        ids, dists, mask = jax.lax.map(chunk_fn, q_r)
+        flat = lambda a: a.reshape(nq, -1)
+        return flat(ids), flat(dists), flat(mask)
+    return chunk_fn(q)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk"))

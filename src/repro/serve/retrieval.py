@@ -3,25 +3,28 @@ feature of the serving path.
 
 An LM (any of the 10 archs) encodes requests to normalized embeddings
 (models.transformer.forward_embed); the corpus embeddings live in a
-HybridLSHIndex (cosine/SimHash by default).  Every retrieval request
-goes through the paper's Algorithm 2: estimate LSHCost from bucket
-sizes + merged HLLs, then run LSH-based or linear search per query
-group.  ``stats`` exposes the routing decisions for observability.
+DynamicHybridIndex (cosine/SimHash by default) — the streaming variant,
+so a serving corpus mutates live via ``add_documents`` /
+``remove_documents`` instead of full rebuilds.  Every retrieval request
+goes through the paper's Algorithm 2 with the tombstone-corrected
+estimate, then runs LSH-based or linear search per query group.
+``stats`` exposes routing decisions and compaction counters.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import CostModel, HybridLSHIndex
+from repro.core import CostModel
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
+from repro.streaming import CompactionPolicy, DynamicHybridIndex
 
 
 @dataclasses.dataclass
@@ -33,6 +36,10 @@ class RetrievalConfig:
     cap: int = 128
     beta_over_alpha: float = 10.0
     delta: float = 0.1
+    # Streaming-index knobs.
+    delta_capacity: int = 4096
+    compact_delta_fill: float = 1.0
+    compact_tombstone_ratio: float = 0.25
 
 
 class RetrievalService:
@@ -43,24 +50,47 @@ class RetrievalService:
         self.cfg, self.par, self.params, self.rcfg = cfg, par, params, rcfg
         self._embed = jax.jit(
             lambda p, b: forward_embed(p, b, cfg, par))
-        self.index: Optional[HybridLSHIndex] = None
+        self.index: Optional[DynamicHybridIndex] = None
         self._queries_served = 0
         self._linear_served = 0
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         return self._embed(self.params, batch)
 
-    def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
+    def _embed_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
         embs = [np.asarray(self.embed(b)) for b in batches]
-        corpus = jnp.asarray(np.concatenate(embs, axis=0))
+        return jnp.asarray(np.concatenate(embs, axis=0))
+
+    def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
+        corpus = self._embed_corpus(batches)
         r = self.rcfg
         fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
                           r=r.radius, delta=r.delta)
-        self.index = HybridLSHIndex(
+        self.index = DynamicHybridIndex(
             fam, num_buckets=r.num_buckets, m=r.hll_m, cap=r.cap,
-            cost_model=CostModel(alpha=1.0, beta=r.beta_over_alpha))
+            delta_capacity=r.delta_capacity,
+            cost_model=CostModel(alpha=1.0, beta=r.beta_over_alpha),
+            policy=CompactionPolicy(
+                delta_fill=r.compact_delta_fill,
+                tombstone_ratio=r.compact_tombstone_ratio))
         self.index.build(corpus)
         return corpus.shape[0]
+
+    # ------------------------------------------------------- live mutation
+    def add_documents(self,
+                      batches: Iterable[Dict[str, jax.Array]]) -> np.ndarray:
+        """Embed + insert new documents; returns their doc ids.
+
+        Inserts land in the delta segment (no rebuild); compaction folds
+        them into the main segment per the configured policy.
+        """
+        assert self.index is not None, "call index_corpus first"
+        return self.index.insert(self._embed_corpus(batches))
+
+    def remove_documents(self, doc_ids: Sequence[int]) -> int:
+        """Tombstone documents by id; returns #removed."""
+        assert self.index is not None, "call index_corpus first"
+        return self.index.delete(doc_ids)
 
     def query(self, batch: Dict[str, jax.Array],
               radius: Optional[float] = None):
@@ -75,6 +105,9 @@ class RetrievalService:
     @property
     def stats(self) -> Dict[str, float]:
         served = max(self._queries_served, 1)
-        return {"queries": self._queries_served,
-                "frac_linear": self._linear_served / served,
-                "index_size": self.index.n if self.index else 0}
+        out = {"queries": self._queries_served,
+               "frac_linear": self._linear_served / served,
+               "index_size": self.index.n if self.index else 0}
+        if self.index is not None:
+            out.update(self.index.index_stats())
+        return out

@@ -1,0 +1,54 @@
+"""Compaction policy + bookkeeping for the streaming index.
+
+Compaction folds the delta segment and drops tombstoned rows by
+rebuilding the main segment through the existing ``build_tables`` fusion
+— the one batch pass the paper's Algorithm 1 already optimizes.  It is
+triggered by either pressure signal:
+
+  * delta fill      — the fixed-capacity delta is (nearly) full, so
+                      inserts would block;
+  * tombstone ratio — dead main rows waste gather bandwidth and widen
+                      the gap between the HLL estimate and live reality.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+__all__ = ["CompactionPolicy", "CompactionStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    delta_fill: float = 1.0        # compact when delta count/capacity >= this
+    tombstone_ratio: float = 0.25  # compact when dead/main >= this
+
+    def reason(self, *, delta_count: int, delta_capacity: int,
+               n_main: int, n_dead: int) -> Optional[str]:
+        """Why compaction should run now, or None."""
+        if delta_capacity and delta_count / delta_capacity >= self.delta_fill:
+            return "delta_full"
+        if n_main and n_dead / n_main >= self.tombstone_ratio:
+            return "tombstones"
+        return None
+
+
+@dataclasses.dataclass
+class CompactionStats:
+    compactions: int = 0
+    last_reason: Optional[str] = None
+    last_seconds: float = 0.0
+    rows_dropped: int = 0       # tombstoned rows reclaimed, cumulative
+
+    def record(self, reason: str, t0: float, dropped: int) -> None:
+        self.compactions += 1
+        self.last_reason = reason
+        self.last_seconds = time.perf_counter() - t0
+        self.rows_dropped += int(dropped)
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"compactions": self.compactions,
+                "last_reason": self.last_reason,
+                "last_seconds": self.last_seconds,
+                "rows_dropped": self.rows_dropped}

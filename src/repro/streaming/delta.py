@@ -1,0 +1,127 @@
+"""Fixed-capacity delta segment — the mutable half of the streaming index.
+
+Layout (capacity ``C``; one trash row at index ``C`` absorbs masked
+scatter lanes so every update stays fixed-shape):
+
+  x          (C + 1, d)   inserted rows (same dtype as the main corpus;
+                          packed uint32 codes for the hamming metric)
+  bucket_ids (C + 1, L)   per-table bucket of each row
+  ids        (C + 1,)     external document ids
+  live       (C + 1,)     False = empty slot or tombstoned; live[C] stays False
+  count      ()           rows ever written (monotone until compaction reset)
+
+Inserts are one fused ``.at[]`` scatter over a padded batch: ``count`` is
+a traced scalar, so repeated same-size inserts hit the same jit cache
+entry (no retrace).  Queries treat the delta as a small exact segment:
+per-table equality against ``bucket_ids`` replaces the CSR walk, and the
+counts are exact — unlike the main segment's HyperLogLogs they decrement
+for free when ``live`` flips off, which is why the delta needs no sketch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = ["DeltaSegment", "make_delta", "insert", "kill",
+           "collision_stats", "search"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeltaSegment:
+    x: jax.Array            # (C + 1, d)
+    bucket_ids: jax.Array   # (C + 1, L) int32
+    ids: jax.Array          # (C + 1,) int32 external doc ids
+    live: jax.Array         # (C + 1,) bool
+    count: jax.Array        # () int32
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0] - 1
+
+    def tree_flatten(self):
+        return ((self.x, self.bucket_ids, self.ids, self.live, self.count),
+                None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def make_delta(capacity: int, d: int, L: int,
+               dtype=jnp.float32) -> DeltaSegment:
+    c = int(capacity)
+    return DeltaSegment(
+        x=jnp.zeros((c + 1, d), dtype),
+        bucket_ids=jnp.full((c + 1, L), -1, jnp.int32),
+        ids=jnp.full((c + 1,), -1, jnp.int32),
+        live=jnp.zeros((c + 1,), bool),
+        count=jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def insert(delta: DeltaSegment, rows: jax.Array, bids: jax.Array,
+           ext_ids: jax.Array, valid: jax.Array) -> DeltaSegment:
+    """Append a padded batch; invalid lanes land on the trash row."""
+    k = valid.shape[0]
+    slot = delta.count + jnp.arange(k, dtype=jnp.int32)
+    idx = jnp.where(valid, slot, delta.capacity)
+    return DeltaSegment(
+        x=delta.x.at[idx].set(rows),
+        bucket_ids=delta.bucket_ids.at[idx].set(bids.astype(jnp.int32)),
+        ids=delta.ids.at[idx].set(ext_ids.astype(jnp.int32)),
+        live=delta.live.at[idx].set(valid).at[delta.capacity].set(False),
+        count=delta.count + jnp.sum(valid, dtype=jnp.int32))
+
+
+@jax.jit
+def kill(delta: DeltaSegment, slots: jax.Array,
+         valid: jax.Array) -> DeltaSegment:
+    """Tombstone delta slots (padded batch; trash row absorbs padding)."""
+    idx = jnp.where(valid, slots, delta.capacity)
+    return dataclasses.replace(delta, live=delta.live.at[idx].set(False))
+
+
+@jax.jit
+def collision_stats(delta: DeltaSegment, qbuckets: jax.Array):
+    """Exact per-query delta counts: (collisions, distinct), both (Q,).
+
+    The streaming analogue of ``bucket_counts`` + the HLL candSize term,
+    except both are exact (and already tombstone-aware via ``live``).
+    """
+    hit = (qbuckets[:, None, :].astype(jnp.int32)
+           == delta.bucket_ids[None, :, :])          # (Q, C + 1, L)
+    hit = hit & delta.live[None, :, None]
+    collisions = jnp.sum(hit, axis=(1, 2), dtype=jnp.int32)
+    distinct = jnp.sum(jnp.any(hit, axis=-1), axis=1, dtype=jnp.int32)
+    return collisions, distinct
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "require_collision", "impl"))
+def search(delta: DeltaSegment, qbuckets: jax.Array, q: jax.Array, r: float,
+           metric: str, require_collision: bool = True,
+           impl: str | None = None):
+    """Exact scan of the delta segment -> (ext_ids, dists, mask), (Q, C+1).
+
+    ``require_collision=True`` mirrors LSH-route semantics (a delta row
+    is a candidate only if it collides in >= 1 table); ``False`` mirrors
+    the linear route (every live row is checked).
+    """
+    if metric == "hamming":
+        dists = ops.hamming_dist(q, delta.x, impl=impl).astype(jnp.float32)
+    else:
+        dists = ops.pairwise_dist(q, delta.x, metric, impl=impl)
+    thresh = ops.metric_radius_transform(metric, r)
+    mask = (dists <= thresh) & delta.live[None, :]
+    if require_collision:
+        hit = jnp.any(qbuckets[:, None, :].astype(jnp.int32)
+                      == delta.bucket_ids[None, :, :], axis=-1)
+        mask = mask & hit
+    ids = jnp.broadcast_to(delta.ids[None, :], dists.shape)
+    return ids, dists, mask

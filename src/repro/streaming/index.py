@@ -1,0 +1,445 @@
+"""DynamicHybridIndex — incremental inserts/deletes over the static core.
+
+Segment architecture (LSM-flavoured, one level):
+
+  * main segment   — immutable CSR ``LSHTables`` + per-bucket HLLs, built
+    by the paper's Algorithm 1 fusion.  Deletes tombstone rows
+    (``streaming.tombstones``); the tables never mutate.
+  * delta segment  — fixed-capacity append-only buffers
+    (``streaming.delta``); inserts are one fused ``.at[]`` scatter, so
+    repeated same-size inserts never retrace.  Counts are exact.
+  * compaction     — when the delta fills or tombstones accumulate
+    (``CompactionPolicy``), live rows from both segments are folded into
+    a fresh main segment via ``build_tables``.
+
+Queries run Algorithm 2 with the tombstone-corrected estimate
+(``router.estimate_routes_dynamic``), search both segments with the
+static kernels (``lsh_search``/``linear_search`` on main, an exact
+masked scan on the small delta), mask tombstones, and report *external*
+document ids.  A mixed insert/delete workload therefore reports exactly
+the candidates a fresh ``HybridLSHIndex.build()`` on the surviving
+corpus would (same family parameters, cap permitting).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as search_lib
+from repro.core.cost_model import CostModel
+from repro.core.index import QueryResult
+from repro.core.lsh.tables import LSHTables
+from repro.core.router import (RouteEstimate, _pad_size,
+                               estimate_routes_dynamic, partition_indices)
+from repro.streaming import delta as delta_lib
+from repro.streaming import tombstones as tomb_lib
+from repro.streaming.compaction import CompactionPolicy, CompactionStats
+from repro.streaming.segment import MainSegment, build_main
+
+__all__ = ["DynamicHybridIndex"]
+
+_EXT_SENTINEL = np.int32(2**31 - 1)  # masked-out slots in reported buffers
+_pad_pow2 = _pad_size                # same pow2 padding as the router groups
+
+
+class DynamicHybridIndex:
+    """Streaming Hybrid LSH index: insert / delete / compact / query."""
+
+    def __init__(self, family, *, num_buckets: int, m: int = 64,
+                 cap: int = 64, delta_capacity: int = 4096,
+                 cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
+                 policy: CompactionPolicy = CompactionPolicy(),
+                 key: jax.Array | int = 0, impl: Optional[str] = None):
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self.family = family
+        self.params = family.init(key)
+        self.num_buckets = int(num_buckets)
+        self.m = int(m)
+        self.cap = int(cap)
+        self.delta_capacity = int(delta_capacity)
+        self.cost_model = cost_model
+        self.policy = policy
+        self.impl = impl
+        self._bucket_fn = jax.jit(functools.partial(
+            self.family.bucket_ids, num_buckets=self.num_buckets))
+
+        self.main: Optional[MainSegment] = None
+        self.tomb: Optional[tomb_lib.Tombstones] = None
+        self.delta: Optional[delta_lib.DeltaSegment] = None
+        self.stats = CompactionStats()
+        # Host bookkeeping: external id -> ("m", row) | ("d", slot).
+        self._loc: Dict[int, tuple] = {}
+        self._next_id = 0
+        self._n_main_live = 0
+        self._n_delta_live = 0
+        self._inserts = 0
+        self._deletes = 0
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def n(self) -> int:
+        """Live document count (main live + delta live)."""
+        return self._n_main_live + self._n_delta_live
+
+    @property
+    def n_dead(self) -> int:
+        return (self.main.n if self.main else 0) - self._n_main_live
+
+    # ------------------------------------------------------------- build
+    def build(self, x: jax.Array,
+              ids: Optional[Sequence[int]] = None) -> "DynamicHybridIndex":
+        """Initial batch build (Algorithm 1); ``ids`` default to 0..n-1."""
+        x = jnp.asarray(x)
+        if ids is None:
+            ids = np.arange(x.shape[0], dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            assert len(set(ids.tolist())) == len(ids), "duplicate ids"
+        self._set_main(x, ids)
+        self._reset_delta(x.shape[1], x.dtype)
+        self._next_id = int(ids.max()) + 1 if len(ids) else 0
+        return self
+
+    def _set_main(self, x: jax.Array, ext_ids: np.ndarray) -> None:
+        n = int(x.shape[0])
+        if n == 0:
+            self.main = None
+            self.tomb = None
+            self._n_main_live = 0
+        else:
+            self.main = build_main(x, jnp.asarray(ext_ids, jnp.int32),
+                                   self._bucket_fn, self.params,
+                                   self.num_buckets, self.m)
+            self.tomb = tomb_lib.make_tombstones(
+                n, self.main.tables.L, self.num_buckets)
+            self._n_main_live = n
+        self._loc = {int(e): ("m", i) for i, e in enumerate(ext_ids)}
+
+    def _reset_delta(self, d: int, dtype) -> None:
+        self.delta = delta_lib.make_delta(self.delta_capacity, d,
+                                          self.family.L, dtype)
+        self._n_delta_live = 0
+
+    # ------------------------------------------------------------ insert
+    def insert(self, rows: jax.Array,
+               ids: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Append documents; returns their external ids.
+
+        Splits the batch by remaining delta capacity, compacting between
+        chunks when the delta fills — inserts never block indefinitely.
+        """
+        rows = jnp.asarray(rows)
+        if rows.shape[0] == 0:
+            return np.zeros((0,), np.int64)
+        if self.delta is None:  # first contact: empty index, delta-only
+            self._reset_delta(rows.shape[1], rows.dtype)
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + rows.shape[0],
+                            dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            if len(set(ids.tolist())) != len(ids):
+                raise KeyError("duplicate ids within insert batch")
+        for e in ids.tolist():
+            if e in self._loc:
+                raise KeyError(f"id {e} already indexed")
+        lo = 0
+        while lo < rows.shape[0]:
+            free = self.delta.capacity - int(self.delta.count)
+            if free == 0:
+                self.compact(reason="delta_full")
+                free = self.delta.capacity
+            take = min(free, rows.shape[0] - lo)
+            self._insert_chunk(rows[lo:lo + take], ids[lo:lo + take])
+            lo += take
+        self._next_id = max(self._next_id, int(ids.max()) + 1)
+        self._maybe_compact()
+        return ids
+
+    def _insert_chunk(self, rows: jax.Array, ids: np.ndarray) -> None:
+        k = rows.shape[0]
+        pk = _pad_pow2(k)
+        pad = [(0, pk - k)] + [(0, 0)] * (rows.ndim - 1)
+        rows_p = jnp.pad(rows, pad)
+        bids = self._bucket_fn(self.params, rows_p)     # (pk, L)
+        ids_p = np.zeros(pk, np.int32)
+        ids_p[:k] = ids
+        valid = np.zeros(pk, bool)
+        valid[:k] = True
+        base = int(self.delta.count)
+        self.delta = delta_lib.insert(self.delta, rows_p, bids,
+                                      jnp.asarray(ids_p),
+                                      jnp.asarray(valid))
+        for i, e in enumerate(ids.tolist()):
+            self._loc[int(e)] = ("d", base + i)
+        self._n_delta_live += k
+        self._inserts += k
+
+    # ------------------------------------------------------------ delete
+    def delete(self, ids: Iterable[int], strict: bool = False) -> int:
+        """Tombstone documents by external id; returns #removed.
+
+        Unknown (or already-deleted) ids are skipped unless ``strict``.
+        """
+        main_rows, delta_slots = [], []
+        for e in ids:
+            loc = self._loc.pop(int(e), None)
+            if loc is None:
+                if strict:
+                    raise KeyError(e)
+                continue
+            (main_rows if loc[0] == "m" else delta_slots).append(loc[1])
+        if main_rows:
+            k = len(main_rows)
+            pk = _pad_pow2(k)
+            rows_p = np.zeros(pk, np.int32)
+            rows_p[:k] = main_rows
+            valid = np.zeros(pk, bool)
+            valid[:k] = True
+            # padded lanes point at row 0's buckets but add 0 there
+            row_buckets = self.main.bucket_ids[jnp.asarray(rows_p)]
+            self.tomb = tomb_lib.mark_dead(self.tomb, jnp.asarray(rows_p),
+                                           row_buckets, jnp.asarray(valid))
+            self._n_main_live -= k
+        if delta_slots:
+            k = len(delta_slots)
+            pk = _pad_pow2(k)
+            slots_p = np.zeros(pk, np.int32)
+            slots_p[:k] = delta_slots
+            valid = np.zeros(pk, bool)
+            valid[:k] = True
+            self.delta = delta_lib.kill(self.delta, jnp.asarray(slots_p),
+                                        jnp.asarray(valid))
+            self._n_delta_live -= k
+        removed = len(main_rows) + len(delta_slots)
+        self._deletes += removed
+        self._maybe_compact()
+        return removed
+
+    # --------------------------------------------------------- compaction
+    def _maybe_compact(self) -> None:
+        reason = self.policy.reason(
+            delta_count=int(self.delta.count) if self.delta else 0,
+            delta_capacity=self.delta_capacity,
+            n_main=self.main.n if self.main else 0,
+            n_dead=self.n_dead)
+        if reason:
+            self.compact(reason=reason)
+
+    def compact(self, reason: str = "manual") -> None:
+        """Fold delta + drop tombstones into a fresh main segment."""
+        import time
+        t0 = time.perf_counter()
+        dropped = self.n_dead + (int(self.delta.count) - self._n_delta_live
+                                 if self.delta else 0)
+        parts_x, parts_id = [], []
+        if self.main is not None:
+            live = np.asarray(self.tomb.live[:self.main.n])
+            parts_x.append(np.asarray(self.main.x)[live])
+            parts_id.append(np.asarray(self.main.ids)[live])
+        if self.delta is not None:
+            c = self.delta.capacity
+            live = np.asarray(self.delta.live[:c])
+            parts_x.append(np.asarray(self.delta.x[:c])[live])
+            parts_id.append(np.asarray(self.delta.ids[:c])[live])
+        if not parts_x:
+            return
+        x = jnp.asarray(np.concatenate(parts_x, axis=0))
+        ext = np.concatenate(parts_id, axis=0).astype(np.int64)
+        self._set_main(x, ext)
+        self._reset_delta(x.shape[1] if x.ndim > 1 else 1, x.dtype)
+        self.stats.record(reason, t0, dropped)
+
+    # ------------------------------------------------------------- query
+    def estimate(self, queries: jax.Array) -> RouteEstimate:
+        assert self.delta is not None, "index is empty: build/insert first"
+        return self._estimate(self._bucket_fn(self.params,
+                                              jnp.asarray(queries)))
+
+    def _estimate(self, qb: jax.Array) -> RouteEstimate:
+        d_coll, d_dist = delta_lib.collision_stats(self.delta, qb)
+        n_scan = int(self.delta.count)  # occupied delta slots
+        if self.main is not None:
+            return estimate_routes_dynamic(
+                self.main.tables, qb, self.cost_model, self.n,
+                tomb_counts=self.tomb.counts, delta_collisions=d_coll,
+                delta_distinct=d_dist, n_scan=self.main.n + n_scan,
+                impl=self.impl)
+        # Delta-only index: counts are exact, no correction needed.
+        lsh_cost = self.cost_model.lsh_cost(d_coll.astype(jnp.float32),
+                                            d_dist.astype(jnp.float32))
+        linear_cost = float(self.cost_model.linear_cost(n_scan))
+        return RouteEstimate(collisions=d_coll,
+                             cand_est=d_dist.astype(jnp.float32),
+                             lsh_cost=lsh_cost, linear_cost=linear_cost,
+                             use_lsh=lsh_cost < linear_cost)
+
+    def query(self, queries: jax.Array, r: float,
+              force: Optional[str] = None) -> QueryResult:
+        """Hybrid r-NN reporting over both segments; ids are external."""
+        assert self.delta is not None, "index is empty: build/insert first"
+        queries = jnp.asarray(queries)
+        nq = queries.shape[0]
+        qb = self._bucket_fn(self.params, queries)
+        route = self._estimate(qb)
+        if force == "lsh":
+            use = np.ones(nq, bool)
+        elif force == "linear":
+            use = np.zeros(nq, bool)
+        else:
+            use = np.asarray(route.use_lsh)
+        lsh_idx, lin_idx = partition_indices(use)
+
+        lsh_out = lin_out = None
+        if len(lsh_idx):
+            lsh_out = self._search_group(queries[lsh_idx], qb[lsh_idx], r,
+                                         lsh_route=True)
+        if len(lin_idx):
+            lin_out = self._search_group(queries[lin_idx], qb[lin_idx], r,
+                                         lsh_route=False)
+        return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
+                           lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
+
+    def _search_group(self, q: jax.Array, qb: jax.Array, r: float,
+                      lsh_route: bool):
+        """Search main + delta for one routed group; concat the buffers."""
+        metric = self.family.metric
+        parts = []
+        if self.main is not None:
+            n = self.main.n
+            if lsh_route:
+                ids, dists, mask = search_lib.lsh_search(
+                    self.main.x, self.main.tables, qb, q, float(r), metric,
+                    self.cap, q_chunk=min(32, q.shape[0]))
+            else:
+                ids, dists, mask = search_lib.linear_search(
+                    self.main.x, q, float(r), metric, impl=self.impl)
+            safe = jnp.clip(ids, 0, n - 1)
+            mask = mask & self.tomb.live[safe]
+            ext = jnp.where(mask, self.main.ids[safe], _EXT_SENTINEL)
+            parts.append((ext, dists, mask))
+        d_ids, d_dists, d_mask = delta_lib.search(
+            self.delta, qb, q, float(r), metric,
+            require_collision=lsh_route, impl=self.impl)
+        d_ids = jnp.where(d_mask, d_ids, _EXT_SENTINEL)
+        parts.append((d_ids, d_dists, d_mask))
+        if len(parts) == 1:
+            return parts[0]
+        return tuple(jnp.concatenate([p[i] for p in parts], axis=-1)
+                     for i in range(3))
+
+    # ------------------------------------------------------ observability
+    def index_stats(self) -> Dict[str, object]:
+        out = {
+            "n_live": self.n,
+            "n_main": self.main.n if self.main else 0,
+            "n_main_dead": self.n_dead,
+            "delta_count": int(self.delta.count) if self.delta else 0,
+            "delta_live": self._n_delta_live,
+            "delta_capacity": self.delta_capacity,
+            "inserts": self._inserts,
+            "deletes": self._deletes,
+        }
+        out.update(self.stats.as_dict())
+        return out
+
+    # -------------------------------------------------------- checkpoint
+    def state_dict(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Segment state as a flat-array pytree (CheckpointManager-ready).
+
+        The family config + cost model are constructor arguments, not
+        state: restore into an index constructed with the same ones.
+        An empty main segment is encoded as zero-length arrays so the
+        tree structure (the restore template) is state-independent.
+        """
+        L = self.family.L
+        d = self.delta.x.shape[1] if self.delta is not None else 0
+        if self.main is not None:
+            t = self.main.tables
+            main = {"x": self.main.x, "ids": self.main.ids,
+                    "bucket_ids": self.main.bucket_ids,
+                    "perm": t.perm, "starts": t.starts,
+                    "registers": t.registers,
+                    "live": self.tomb.live, "tomb_counts": self.tomb.counts}
+        else:
+            main = {"x": np.zeros((0, d), np.float32),
+                    "ids": np.zeros((0,), np.int32),
+                    "bucket_ids": np.zeros((0, L), np.int32),
+                    "perm": np.zeros((L, 0), np.int32),
+                    "starts": np.zeros((L, self.num_buckets + 1), np.int32),
+                    "registers": np.zeros((L, self.num_buckets, self.m),
+                                          np.uint8),
+                    "live": np.zeros((1,), bool),
+                    "tomb_counts": np.zeros((L, self.num_buckets),
+                                            np.int32)}
+        delta = (self.delta if self.delta is not None
+                 else delta_lib.make_delta(self.delta_capacity, 1, L))
+        return {
+            "params": self.params,
+            "main": {k: np.asarray(v) for k, v in main.items()},
+            "delta": {"x": np.asarray(delta.x),
+                      "bucket_ids": np.asarray(delta.bucket_ids),
+                      "ids": np.asarray(delta.ids),
+                      "live": np.asarray(delta.live),
+                      "count": np.asarray(delta.count)},
+            # delta_d == 0 marks "never populated": the saved delta row
+            # width is a placeholder and must not survive a restore.
+            "meta": {"next_id": np.int64(self._next_id),
+                     "delta_d": np.int64(0 if self.delta is None else d)},
+        }
+
+    def load_state_dict(self, state) -> "DynamicHybridIndex":
+        """Restore segment state saved by ``state_dict``."""
+        self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
+        self._bucket_fn = jax.jit(functools.partial(
+            self.family.bucket_ids, num_buckets=self.num_buckets))
+        ms, ds = state["main"], state["delta"]
+        x = jnp.asarray(ms["x"])
+        if x.shape[0] > 0:
+            self.main = MainSegment(
+                x=x, ids=jnp.asarray(ms["ids"], jnp.int32),
+                bucket_ids=jnp.asarray(ms["bucket_ids"], jnp.int32),
+                tables=LSHTables(jnp.asarray(ms["perm"], jnp.int32),
+                                 jnp.asarray(ms["starts"], jnp.int32),
+                                 jnp.asarray(ms["registers"], jnp.uint8)))
+            self.tomb = tomb_lib.Tombstones(
+                live=jnp.asarray(ms["live"], bool),
+                counts=jnp.asarray(ms["tomb_counts"], jnp.int32))
+            self._n_main_live = int(np.asarray(ms["live"]).sum())
+        else:
+            self.main = None
+            self.tomb = None
+            self._n_main_live = 0
+        if int(np.asarray(state["meta"].get("delta_d", 1))) == 0:
+            self.delta = None        # saved before first build/insert
+            self._n_delta_live = 0
+            dl = np.zeros((0,), bool)
+        else:
+            self.delta = delta_lib.DeltaSegment(
+                x=jnp.asarray(ds["x"]),
+                bucket_ids=jnp.asarray(ds["bucket_ids"], jnp.int32),
+                ids=jnp.asarray(ds["ids"], jnp.int32),
+                live=jnp.asarray(ds["live"], bool),
+                count=jnp.asarray(ds["count"], jnp.int32))
+            self.delta_capacity = self.delta.capacity
+            dl = np.asarray(self.delta.live)
+            self._n_delta_live = int(dl.sum())
+        self._next_id = int(np.asarray(state["meta"]["next_id"]))
+        # Rebuild the host id -> location map from segment state.
+        self._loc = {}
+        if self.main is not None:
+            live = np.asarray(self.tomb.live[:self.main.n])
+            for i, e in enumerate(np.asarray(self.main.ids).tolist()):
+                if live[i]:
+                    self._loc[int(e)] = ("m", i)
+        if self.delta is not None:
+            d_ids = np.asarray(self.delta.ids)
+            for s in range(int(self.delta.count)):
+                if dl[s]:
+                    self._loc[int(d_ids[s])] = ("d", s)
+        return self

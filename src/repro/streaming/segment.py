@@ -1,0 +1,45 @@
+"""The immutable main segment: corpus rows + CSR tables + per-bucket HLLs.
+
+A thin wrapper over the static core's ``build_tables`` fusion
+(Algorithm 1).  Rows are addressed by *internal* position (0..n-1) —
+that is the id the HLL registers are keyed on, which keeps table/shard
+merges exact — and mapped to external document ids via ``ids``.
+``bucket_ids`` is retained so deletes can update the per-bucket
+tombstone counts without re-hashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsh.tables import LSHTables, build_tables
+
+__all__ = ["MainSegment", "build_main"]
+
+
+@dataclasses.dataclass
+class MainSegment:
+    x: jax.Array            # (n, d) corpus rows
+    ids: jax.Array          # (n,) int32 external doc ids
+    bucket_ids: jax.Array   # (n, L) int32 per-table buckets
+    tables: LSHTables
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+
+def build_main(x: jax.Array, ext_ids: jax.Array, bucket_fn, params,
+               num_buckets: int, m: int, chunk: int = 65536) -> MainSegment:
+    """Algorithm 1 on a row block: chunked hashing + fused table build."""
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    bids = [bucket_fn(params, x[lo:lo + chunk]) for lo in range(0, n, chunk)]
+    bucket_ids = jnp.concatenate(bids, axis=0)          # (n, L)
+    tables = build_tables(jnp.arange(n, dtype=jnp.int32), bucket_ids,
+                          num_buckets, m)
+    return MainSegment(x=x, ids=jnp.asarray(ext_ids, jnp.int32),
+                       bucket_ids=bucket_ids.astype(jnp.int32),
+                       tables=tables)

@@ -1,0 +1,72 @@
+"""Tombstones for the immutable main segment.
+
+The main segment's CSR tables and per-bucket HyperLogLogs are immutable
+(HLL registers are monotone — they cannot decrement), so deletes are
+recorded on the side:
+
+  live    (n + 1,)  bool   row liveness; the trash row at index n stays False
+  counts  (L, B)    int32  dead entries per (table, bucket)
+
+``counts`` is the exact correction term for the router: subtracting it
+from the CSR bucket sizes gives exact *live* collisions, and subtracting
+its per-query sum from the HLL union bounds the live candSize from below
+(a dead point colliding in several tables is subtracted once per table).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Tombstones", "make_tombstones", "mark_dead", "dead_in_buckets"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Tombstones:
+    live: jax.Array     # (n + 1,) bool
+    counts: jax.Array   # (L, B) int32
+
+    @property
+    def n(self) -> int:
+        return self.live.shape[0] - 1
+
+    def tree_flatten(self):
+        return ((self.live, self.counts), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def make_tombstones(n: int, L: int, num_buckets: int) -> Tombstones:
+    live = jnp.ones((int(n) + 1,), bool).at[int(n)].set(False)
+    return Tombstones(live=live,
+                      counts=jnp.zeros((int(L), int(num_buckets)),
+                                       jnp.int32))
+
+
+@jax.jit
+def mark_dead(ts: Tombstones, rows: jax.Array, row_buckets: jax.Array,
+              valid: jax.Array) -> Tombstones:
+    """Tombstone main rows (padded batch).
+
+    rows: (k,) main-internal row indices; row_buckets: (k, L) their
+    bucket per table (callers pad invalid lanes with bucket 0 — the
+    scatter-add contributes 0 there).
+    """
+    idx = jnp.where(valid, rows, ts.n)
+    live = ts.live.at[idx].set(False)
+    L = ts.counts.shape[0]
+    lidx = jnp.broadcast_to(jnp.arange(L)[None, :], row_buckets.shape)
+    counts = ts.counts.at[lidx, row_buckets].add(
+        jnp.broadcast_to(valid[:, None], row_buckets.shape)
+        .astype(jnp.int32))
+    return Tombstones(live=live, counts=counts)
+
+
+def dead_in_buckets(ts: Tombstones, qbuckets: jax.Array) -> jax.Array:
+    """(Q, L) query buckets -> (Q, L) exact dead-entry counts."""
+    lidx = jnp.arange(ts.counts.shape[0])[None, :]
+    return ts.counts[lidx, qbuckets.astype(jnp.int32)]

@@ -1,0 +1,85 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+Implements the tiny strategy surface the test suite uses (``integers``,
+``lists``, ``sampled_from``) plus ``given``/``settings`` decorators that
+replay a fixed number of seeded pseudo-random examples.  Not a property
+tester — no shrinking, no example database — but it keeps the property
+tests *running* (instead of skipped) on minimal images.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def example(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem: _Strategy, min_size: int, max_size: int):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng):
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elem.example(rng) for _ in range(size)]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def example(self, rng):
+        return self.seq[int(rng.integers(0, len(self.seq)))]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        return _SampledFrom(seq)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would introspect the wrapped
+        # signature and treat the example parameters as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            # crc32, not hash(): str hashing is salted per process and
+            # would make "deterministic" examples unreproducible.
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode()) & 0xFFFFFFFF)
+            for _ in range(n):
+                fn(*[s.example(rng) for s in strats])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

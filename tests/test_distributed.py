@@ -12,6 +12,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal images: deterministic fallback strategies
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.lsh import (BitSampling, PStableL1, PStableL2, SimHash,
                             build_tables, bucket_counts, gather_candidates,

@@ -64,6 +64,41 @@ def test_retrieval_service_end_to_end():
     assert found >= 28  # >= 1 - delta of self-matches at distance 0
 
 
+def test_retrieval_service_live_mutation():
+    """add/remove documents mutate the serving index without a rebuild."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64, delta_capacity=128))
+    corpus = []
+    for i in range(2):
+        b = lm_batch(3, i, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        corpus.append(b)
+    assert svc.index_corpus(corpus[:1]) == 32
+
+    extra = corpus[1]
+    new_ids = svc.add_documents([extra])
+    assert len(new_ids) == 32 and svc.index.n == 64
+    assert svc.stats["delta_live"] == 32          # no rebuild: delta holds them
+
+    # added docs used as queries report themselves
+    res, _ = svc.query(extra)
+    found = sum(1 for i in range(32)
+                if set(res.neighbors(i).tolist()) & set(new_ids.tolist()))
+    assert found >= 28
+
+    assert svc.remove_documents(new_ids.tolist()) == 32
+    assert svc.index.n == 32
+    res2, _ = svc.query(extra)
+    reported = set().union(*(set(res2.neighbors(i).tolist())
+                             for i in range(32)))
+    assert reported.isdisjoint(set(new_ids.tolist()))
+    assert "compactions" in svc.stats
+
+
 def test_scheduler_pow2_bucketing():
     sched = ShapeBucketScheduler(max_batch=16, min_bucket=4)
     for i in range(21):

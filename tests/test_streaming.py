@@ -1,0 +1,223 @@
+"""Streaming index subsystem: delta inserts, tombstoned deletes,
+HLL-aware compaction, corrected routing, checkpoint round-trip.
+
+The load-bearing contract: a mixed insert/delete workload must report
+exactly the candidate sets a fresh ``HybridLSHIndex.build()`` on the
+surviving corpus reports (same family params, truncation-free cap) —
+per route, since LSH and linear search have different reporting sets.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core import CostModel, HybridLSHIndex, hll
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import CompactionPolicy, DynamicHybridIndex
+from repro.streaming import delta as delta_lib
+
+D, L, B, M, CAP, R = 8, 4, 256, 32, 2048, 1.2
+NO_AUTO = CompactionPolicy(delta_fill=2.0, tombstone_ratio=2.0)
+
+
+def _data(n=900, seed=0):
+    x = np.asarray(clustered_dataset(n, D, n_clusters=12,
+                                     dense_core_frac=0.2, core_scale=0.05,
+                                     seed=seed, metric="l2"))
+    return x.astype(np.float32)
+
+
+def _fam():
+    return make_family("l2", d=D, L=L, r=1.0)
+
+
+def _dyn(**kw):
+    kw.setdefault("policy", NO_AUTO)
+    kw.setdefault("delta_capacity", 256)
+    return DynamicHybridIndex(_fam(), num_buckets=B, m=M, cap=CAP, key=0,
+                              **kw)
+
+
+def _fresh_sets(x, q, force, ext_ids=None):
+    idx = HybridLSHIndex(_fam(), num_buckets=B, m=M, cap=CAP, key=0).build(x)
+    sets = idx.query(jnp.asarray(q), R, force=force).neighbor_sets()
+    if ext_ids is None:
+        return sets
+    return {k: {int(ext_ids[i]) for i in v} for k, v in sets.items()}
+
+
+def test_insert_then_query_matches_fresh():
+    """Insert-then-query == rebuild-from-scratch, per route (exact)."""
+    x = _data()
+    q = x[::60][:12]
+    dyn = _dyn().build(x[:600])
+    dyn.insert(x[600:750])
+    dyn.insert(x[750:])          # second batch exercises append offsets
+    assert dyn.n == 900
+    for force in ("lsh", "linear"):
+        got = dyn.query(q, R, force=force).neighbor_sets()
+        want = _fresh_sets(x, q, force)
+        assert got == want, force
+    # self-queries must report themselves through either segment
+    assert all(60 * i in got[i] for i in range(12))
+
+
+def test_delete_masks_reported_ids():
+    x = _data()
+    q = x[::60][:10]
+    dyn = _dyn().build(x[:700])
+    dyn.insert(x[700:])
+    dead = list(range(50, 150)) + list(range(720, 760))  # main + delta
+    assert dyn.delete(dead) == 140
+    assert dyn.delete([50, 10**6]) == 0       # double/unknown: no-ops
+    with pytest.raises(KeyError):
+        dyn.delete([50], strict=True)
+    live = np.ones(900, bool)
+    live[dead] = False
+    live_ids = np.nonzero(live)[0]
+    for force in ("lsh", "linear"):
+        got = dyn.query(q, R, force=force).neighbor_sets()
+        want = _fresh_sets(x[live], q, force, ext_ids=live_ids)
+        assert got == want, force
+        flat = set().union(*got.values()) if got else set()
+        assert flat.isdisjoint(dead)
+
+
+def test_compaction_preserves_neighbor_sets():
+    x = _data()
+    q = x[::45][:12]
+    dyn = _dyn(delta_capacity=512).build(x[:600])
+    dyn.insert(x[600:])
+    dyn.delete(range(0, 120, 2))
+    before = {f: dyn.query(q, R, force=f).neighbor_sets()
+              for f in ("lsh", "linear")}
+    dyn.compact()
+    st = dyn.index_stats()
+    assert st["compactions"] == 1 and st["delta_count"] == 0
+    assert st["n_main"] == dyn.n == 900 - 60
+    for f in ("lsh", "linear"):
+        assert dyn.query(q, R, force=f).neighbor_sets() == before[f], f
+
+
+def test_auto_compaction_triggers():
+    x = _data()
+    dyn = _dyn(delta_capacity=64,
+               policy=CompactionPolicy(delta_fill=1.0,
+                                       tombstone_ratio=0.25))
+    dyn.build(x[:300])
+    dyn.insert(x[300:600])       # >> delta capacity: fills force compaction
+    assert dyn.index_stats()["compactions"] >= 3
+    assert dyn.n == 600
+    n_before = dyn.index_stats()["compactions"]
+    dyn.delete(range(0, 200))    # 200/600 > 0.25 tombstone ratio
+    st = dyn.index_stats()
+    assert st["compactions"] > n_before and st["n_main_dead"] == 0
+    assert dyn.n == 400
+
+
+def test_cost_estimate_within_hll_bounds():
+    """After mixed churn, the corrected candSize tracks the live truth."""
+    x = _data()
+    dyn = _dyn().build(x[:700])
+    dyn.insert(x[700:])
+    dyn.delete(range(100, 300, 3))
+    q = x[::37][:16]
+    qb = np.asarray(dyn._bucket_fn(dyn.params, jnp.asarray(q)))   # (Q, L)
+    est = dyn.estimate(jnp.asarray(q))
+    cand = np.asarray(est.cand_est)
+    coll = np.asarray(est.collisions)
+
+    mb = np.asarray(dyn.main.bucket_ids)                 # (n_main, L)
+    mlive = np.asarray(dyn.tomb.live[:dyn.main.n])
+    dcap = dyn.delta.capacity
+    db = np.asarray(dyn.delta.bucket_ids[:dcap])
+    dlive = np.asarray(dyn.delta.live[:dcap])
+    slack_frac = 6 * hll.relative_error(M)
+    for i in range(len(q)):
+        hit_main = (mb == qb[i][None, :]).any(1)
+        true_all = int(hit_main.sum())                   # incl. tombstoned
+        dead_coll = int(((mb == qb[i][None, :]) & ~mlive[:, None]).sum())
+        hit_d = ((db == qb[i][None, :]).any(1) & dlive)
+        delta_distinct = int(hit_d.sum())
+        live_coll = int(coll[i])
+        slack = max(8.0, slack_frac * true_all)
+        hi = min(true_all + slack - dead_coll + delta_distinct,
+                 min(live_coll, dyn.n) + 1e-3)
+        lo = min(max(0.0, true_all - slack - dead_coll) + delta_distinct,
+                 min(live_coll, dyn.n))
+        assert lo - 1e-3 <= cand[i] <= hi + 1e-3, (i, cand[i], lo, hi)
+        # exact live collision count (CSR - tombstones + delta)
+        live_main_coll = int(((mb == qb[i][None, :]) & mlive[:, None]).sum())
+        delta_coll = int(((db == qb[i][None, :]) & dlive[:, None]).sum())
+        assert live_coll == live_main_coll + delta_coll
+
+
+def test_checkpoint_roundtrip_segment_state(tmp_path):
+    x = _data()
+    q = x[::70][:8]
+    dyn = _dyn().build(x[:650])
+    dyn.insert(x[650:])
+    dyn.delete(range(200, 260))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_index(7, dyn)
+
+    restored = _dyn()
+    assert mgr.restore_index(restored) == 7
+    for f in ("lsh", "linear"):
+        assert (restored.query(q, R, force=f).neighbor_sets()
+                == dyn.query(q, R, force=f).neighbor_sets()), f
+    a, b = dyn.index_stats(), restored.index_stats()
+    for key in ("n_live", "n_main", "n_main_dead", "delta_count",
+                "delta_live"):
+        assert a[key] == b[key], key
+    # the restored index keeps streaming: ids continue past the old max
+    new = restored.insert(x[:4])
+    assert new.min() >= 900
+    assert restored.n == dyn.n + 4
+
+
+def test_empty_start_and_delta_only_queries():
+    x = _data(n=200)
+    dyn = _dyn(delta_capacity=256)
+    dyn.insert(x[:100])                       # no main segment yet
+    assert dyn.main is None and dyn.n == 100
+    got = dyn.query(x[:5], R, force="lsh").neighbor_sets()
+    want = _fresh_sets(x[:100], x[:5], "lsh")
+    assert got == want
+    dyn.compact()                             # first compaction creates main
+    assert dyn.main is not None and dyn.main.n == 100
+    assert dyn.query(x[:5], R, force="lsh").neighbor_sets() == want
+
+
+def test_no_retrace_on_repeated_inserts():
+    """Same-size inserts reuse one jit entry (count is traced state)."""
+    x = _data(n=400)
+    dyn = _dyn(delta_capacity=512).build(x[:100])
+    dyn.insert(x[100:108])
+    base = delta_lib.insert._cache_size()
+    for lo in range(108, 300, 8):
+        dyn.insert(x[lo:lo + 8])
+    assert delta_lib.insert._cache_size() == base
+    # deletes likewise: repeated same-size batches, one entry
+    dyn.delete(range(0, 4))
+    base_kill = delta_lib.kill._cache_size()
+    for lo in range(104, 160, 4):
+        dyn.delete(range(lo, lo + 4))
+    assert delta_lib.kill._cache_size() >= base_kill  # delta path
+    assert delta_lib.insert._cache_size() == base     # still no retrace
+
+
+def test_hybrid_routing_still_works_under_churn():
+    """Hybrid (un-forced) routing on a churned index: recall holds."""
+    x = _data()
+    dyn = _dyn(cost_model=CostModel(alpha=1.0, beta=10.0)).build(x[:800])
+    dyn.insert(x[800:])
+    dyn.delete(range(0, 100, 5))
+    q = x[100:140]
+    res = dyn.query(q, R)
+    # linear-route answers are exact; LSH-route answers must contain the
+    # self-match (distance 0 collides in every table).
+    for i in range(len(q)):
+        assert 100 + i in res.neighbors(i).tolist()

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.core import CostModel, HybridLSHIndex
 from repro.core.lsh import make_family
 from repro.data import clustered_dataset, query_split
