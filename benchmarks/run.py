@@ -9,6 +9,7 @@ is appended when results/dryrun JSONs exist.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -20,11 +21,36 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="tiny scale for CI (0.03)")
     ap.add_argument("--emit", metavar="PATH", default=None,
-                    help="run the streaming benchmark and write its JSON "
-                         "(e.g. --emit BENCH_streaming.json); skips the "
-                         "paper tables")
+                    help="run a streaming benchmark and write its JSON; "
+                         "--emit BENCH_streaming.json runs the single-host "
+                         "bench, --emit BENCH_sharded.json the mesh-sharded "
+                         "one (>= 2 host devices forced). Skips the paper "
+                         "tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
+
+    if args.emit and "sharded" in os.path.basename(args.emit):
+        # must precede the first jax import in this process
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + " --xla_force_host_platform_device_count=2").strip()
+        from benchmarks import sharded_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = sharded_bench.main(scale, emit=args.emit)
+        print(f"sharded_churn_throughput,"
+              f"{1e6 / max(rows['churn_docs_per_s'], 1e-9):.1f},"
+              f"{rows['churn_docs_per_s']:.0f} docs/s over "
+              f"{rows['shards']} shards")
+        print(f"sharded_query_per_shard,"
+              f"{1e6 * rows['query_batch_s_per_shard']:.1f},"
+              f"{rows['query_batch_s_per_shard'] / max(rows['query_batch_s_global'], 1e-12):.2f}x global "
+              f"(after compact: "
+              f"{rows['query_batch_s_after_compact'] / max(rows['query_batch_s_global'], 1e-12):.2f}x)")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
 
     if args.emit:
         from benchmarks import streaming_bench

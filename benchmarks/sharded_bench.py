@@ -1,0 +1,115 @@
+"""Sharded streaming benchmark: churn throughput + routing-policy latency.
+
+Measures, at a given ``--scale``, on a host-platform CPU mesh (the
+driver forces >= 2 devices via XLA_FLAGS before jax import):
+
+  * churn throughput — steady-state mixed insert/delete batches into the
+    per-shard delta segments / tombstone bitmaps (docs/s)
+  * query latency under both routing policies ("global" vs "per_shard")
+    on the churned index, and again after per-shard compaction
+  * compaction cost (per-shard build_tables rebuild)
+
+Emits a JSON blob (``--emit``) so the sharded perf trajectory is
+tracked alongside BENCH_streaming.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CostModel
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import CompactionPolicy, ShardedDynamicHybridIndex
+
+
+def main(scale: float = 0.12, emit: str | None = None) -> Dict[str, float]:
+    n = max(2000, int(50000 * scale))
+    n_churn = max(256, n // 8)
+    d, L, B, m, r = 16, 8, 1024, 64, 1.2
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    shards = mesh.shape["data"]
+    x = np.asarray(clustered_dataset(n + n_churn, d, n_clusters=32,
+                                     dense_core_frac=0.2, core_scale=0.05,
+                                     seed=0, metric="l2"), np.float32)
+    rng = np.random.default_rng(0)
+    q = x[rng.integers(0, n, 64)]
+    fam = make_family("l2", d=d, L=L, r=1.0)
+
+    def build(routing):
+        idx = ShardedDynamicHybridIndex(
+            fam, num_buckets=B, mesh=mesh, m=m, cap=256,
+            delta_capacity=max(1024, n_churn),
+            cost_model=CostModel(alpha=1.0, beta=10.0),
+            policy=CompactionPolicy(delta_fill=2.0, tombstone_ratio=2.0),
+            routing=routing, max_out=256, key=0)
+        idx.build(x[:n])
+        return idx
+
+    ins_batch, del_batch = 64, 32
+
+    def churn(i, timed):
+        """Identical mixed insert/delete stream; optionally timed."""
+        t0 = time.perf_counter()
+        ops = 0
+        for lo in range(n + 64, n + n_churn, ins_batch):
+            take = min(ins_batch, n + n_churn - lo)
+            i.insert(x[lo:lo + take])
+            i.delete(range(lo - n, lo - n + del_batch))
+            ops += take + del_batch
+        return ops, (time.perf_counter() - t0) if timed else 0.0
+
+    idx = build("per_shard")
+    # warm the mutation + query paths (jit compile)
+    idx.insert(x[n:n + 64])
+    idx.delete(range(0, 32))
+    idx.query(jnp.asarray(q), r)
+    ops, churn_s = churn(idx, timed=True)
+
+    def time_query(i, iters=5):
+        i.query(jnp.asarray(q), r)            # warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            i.query(jnp.asarray(q), r)
+        return (time.perf_counter() - t0) / iters
+
+    q_per_shard = time_query(idx)
+
+    # same corpus through the same churn, global routing: the latency
+    # ratio isolates the policy, not churn state
+    glob = build("global")
+    glob.insert(x[n:n + 64])
+    glob.delete(range(0, 32))
+    churn(glob, timed=False)
+    q_global = time_query(glob)
+
+    t0 = time.perf_counter()
+    idx.compact()
+    compact_s = time.perf_counter() - t0
+    q_after = time_query(idx)
+    st = idx.index_stats()
+
+    out = {
+        "n": n, "n_churn_ops": ops, "shards": int(shards), "queries": 64,
+        "churn_docs_per_s": ops / max(churn_s, 1e-9),
+        "churn_total_s": churn_s,
+        "query_batch_s_per_shard": q_per_shard,
+        "query_batch_s_global": q_global,
+        "query_batch_s_after_compact": q_after,
+        "compact_s": compact_s,
+        "compact_total_s": st["total_seconds"],
+        "n_live": st["n_live"],
+    }
+    if emit:
+        with open(emit, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

@@ -135,16 +135,21 @@ class CheckpointManager:
         """Snapshot a streaming index's segment state.
 
         ``index`` is any object with a ``state_dict()`` returning an
-        array pytree (``DynamicHybridIndex``); main/delta/tombstone
-        buffers land as one leaf file each under the usual atomic
-        COMMITTED protocol.
+        array pytree (``DynamicHybridIndex`` or the mesh-sharded
+        ``ShardedDynamicHybridIndex``); main/delta/tombstone buffers
+        land as one leaf file each under the usual atomic COMMITTED
+        protocol.  Sharded segment leaves are gathered to full host
+        arrays (leading shard axis kept), so the on-disk format is
+        mesh-agnostic.
         """
         self.save(step, index.state_dict(), blocking=blocking)
 
     def restore_index(self, index, step: Optional[int] = None):
         """Restore segment state into ``index`` (constructed with the
-        same family/config as the one that saved).  Returns the step, or
-        None when no committed checkpoint exists."""
+        same family/config — and, for the sharded index, the same shard
+        count — as the one that saved; ``load_state_dict`` re-places
+        sharded leaves on the index's current mesh).  Returns the step,
+        or None when no committed checkpoint exists."""
         state, step = self.restore(index.state_dict(), step=step)
         if state is None:
             return None

@@ -2,6 +2,8 @@
 
 Public surface:
   * ``HybridLSHIndex``  — single-host build/query (Algorithms 1 + 2)
+  * ``core.engine``     — the segment engine every index composes:
+                          ``QueryEngine`` + ``Segment`` implementations
   * ``core.distributed`` — mesh-sharded index with pmax-merged HLLs
   * ``core.lsh``        — LSH families + CSR tables
   * ``core.hll``        — HyperLogLog sketches
@@ -9,8 +11,12 @@ Public surface:
   * ``core.multiprobe`` — query-directed multi-probe extension
 """
 from repro.core.cost_model import CostModel, PAPER_PRESETS, calibrate
+from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
+                               finalize_route)
 from repro.core.index import HybridLSHIndex, QueryResult
 from repro.core.router import RouteEstimate, estimate_routes
 
 __all__ = ["CostModel", "PAPER_PRESETS", "calibrate", "HybridLSHIndex",
-           "QueryResult", "RouteEstimate", "estimate_routes"]
+           "QueryResult", "RouteEstimate", "estimate_routes",
+           "QueryEngine", "SegmentEstimate", "TableSegment",
+           "finalize_route"]

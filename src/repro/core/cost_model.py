@@ -36,25 +36,6 @@ class CostModel:
         """Algorithm 2 line 4: True -> LSH-based search."""
         return self.lsh_cost(collisions, cand_size) < self.linear_cost(n)
 
-    def corrected_cand_size(self, cand_main, dead_collisions, delta_distinct,
-                            live_collisions, n_live):
-        """Tombstone-corrected candSize for the streaming index.
-
-        Main-segment HLLs are monotone (registers never decrement), so
-        deletions are corrected by subtracting the exact per-bucket dead
-        counts: ``dead_collisions`` >= distinct dead candidates (a dead
-        point colliding in several tables is subtracted once per table),
-        making the corrected estimate a slight under-estimate under
-        churn — biased toward the LSH route, whose verification step
-        masks dead rows cheaply.  The delta term is exact.  Both
-        structural clamps of the static estimator still apply.
-        """
-        cand = jnp.maximum(cand_main - dead_collisions.astype(jnp.float32),
-                           0.0)
-        cand = cand + delta_distinct.astype(jnp.float32)
-        return jnp.minimum(cand, jnp.minimum(
-            live_collisions.astype(jnp.float32), float(n_live)))
-
 
 # beta/alpha presets from the paper's experiments (alpha normalized to 1).
 PAPER_PRESETS = {

@@ -2,9 +2,11 @@
 
 The database is row-sharded over the mesh's ``data`` axis.  Each shard
 builds *local* CSR tables over its rows with globally-unique ids.  At
-query time (queries replicated):
+query time (queries replicated), every shard wraps its tables in the
+engine's ``TableSegment`` and the collectives merge the per-shard
+``SegmentEstimate`` terms:
 
-  * global #collisions      = psum of local bucket counts
+  * global #collisions      = psum of local live collisions
   * global candSize         = HLL estimate of pmax-merged registers —
     HLL mergeability, which the paper uses across L tables, extends
     verbatim across shards: one (Q, m) pmax is the whole estimate.
@@ -16,27 +18,27 @@ query time (queries replicated):
         shard holding a dense cluster scans linearly while others use
         LSH).  This is our main distributed extension of Algorithm 2.
 
-All collectives are jax.lax primitives inside shard_map; the same code
-lowers for the 512-chip production mesh (see launch/dryrun.py).
+Estimate math and both search strategies come from ``core.engine``
+(``finalize_route`` / ``TableSegment.search``); only the collectives
+and the per-shard ``lax.cond`` routing live here.  All collectives are
+jax.lax primitives inside shard_map; the same code lowers for the
+512-chip production mesh (see launch/dryrun.py).  The streaming
+(sharded dynamic) variant lives in ``streaming.sharded``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import search as search_lib
 from repro.core.cost_model import CostModel
-from repro.core.lsh.tables import (LSHTables, build_tables, bucket_counts,
-                                   gather_registers)
-from repro.core.router import compact_results
+from repro.core.engine import (SegmentEstimate, TableSegment,
+                               compact_results, finalize_route)
+from repro.core.lsh.tables import LSHTables, build_tables
 from repro.core import hll as hll_lib
-from repro.kernels import ops
 
 __all__ = ["ShardedIndexState", "build_sharded", "make_query_fn"]
 
@@ -110,53 +112,41 @@ def make_query_fn(family, *, num_buckets: int, mesh: Mesh, n_total: int,
         x_local, perm, starts, registers = state_leaves
         tables = LSHTables(perm[0], starts[0], registers[0])
         qb = family.bucket_ids(params, queries, num_buckets)   # (Q, L)
-
-        counts = bucket_counts(tables, qb)                     # (Q, L)
-        coll_local = jnp.sum(counts, axis=-1)                  # (Q,)
-        coll_global = jax.lax.psum(coll_local, data_axis)
-
-        regs = gather_registers(tables, qb)                    # (Q, L, m)
+        seg = TableSegment(tables=tables, x=x_local, metric=metric,
+                           cap=cap, q_chunk=queries.shape[0],
+                           n_live=n_local, n_scan=n_local)
+        est = seg.estimate_terms(qb)            # collisions + (Q, L, m) regs
         merged_local = hll_lib.merge_registers(
-            regs.astype(jnp.int32), axis=1)                    # (Q, m)
-        merged_global = jax.lax.pmax(merged_local, data_axis)
-        # same structural clamps as router.estimate_routes: candSize is
-        # a distinct count, <= #collisions and <= n.
-        cand_global = jnp.minimum(
-            hll_lib.estimate_from_registers(merged_global),
-            jnp.minimum(coll_global.astype(jnp.float32), float(n_total)))
-        cand_local = jnp.minimum(
-            hll_lib.estimate_from_registers(merged_local),
-            jnp.minimum(coll_local.astype(jnp.float32), float(n_local)))
+            est.registers.astype(jnp.int32), axis=1)           # (Q, m)
+        local = dataclasses.replace(est, registers=None,
+                                    merged_registers=merged_local)
 
-        if policy == "global":
-            lsh_cost = jnp.sum(cost_model.lsh_cost(
-                coll_global.astype(jnp.float32), cand_global))
-            lin_cost = cost_model.linear_cost(float(n_total)) * queries.shape[0]
-        else:  # per_shard
-            lsh_cost = jnp.sum(cost_model.lsh_cost(
-                coll_local.astype(jnp.float32), cand_local))
-            lin_cost = cost_model.linear_cost(float(n_local)) * queries.shape[0]
+        merged = SegmentEstimate(
+            collisions=jax.lax.psum(est.collisions, data_axis),
+            merged_registers=jax.lax.pmax(merged_local, data_axis),
+            n_live=n_total, n_scan=n_total)
+        route_g = finalize_route([merged], cost_model)
+        route_l = finalize_route([local], cost_model)
+
+        route = route_g if policy == "global" else route_l
+        lsh_cost = jnp.sum(route.lsh_cost)
+        lin_cost = route.linear_cost * queries.shape[0]
         use_lsh = lsh_cost < lin_cost                          # scalar/shard
 
-        def lsh_branch(_):
-            ids, dists, mask = search_lib.lsh_search(
-                x_local, tables, qb, queries, r, metric, cap,
-                q_chunk=queries.shape[0])
-            ids, dists, valid = compact_results(ids, dists, mask, max_out)
-            shard_id = jax.lax.axis_index(data_axis)
-            return ids + shard_id * n_local, dists, valid
+        def branch(lsh_route):
+            def fn(_):
+                ids, dists, mask = seg.search(qb, queries, r,
+                                              lsh_route=lsh_route)
+                ids, dists, valid = compact_results(ids, dists, mask,
+                                                    max_out)
+                shard_id = jax.lax.axis_index(data_axis)
+                return ids + shard_id * n_local, dists, valid
+            return fn
 
-        def linear_branch(_):
-            shard_id = jax.lax.axis_index(data_axis)
-            ids, dists, mask = search_lib.linear_search(
-                x_local, queries, r, metric)
-            ids = ids + shard_id * n_local
-            return compact_results(ids, dists, mask, max_out)
-
-        ids, dists, mask = jax.lax.cond(use_lsh, lsh_branch, linear_branch,
+        ids, dists, mask = jax.lax.cond(use_lsh, branch(True), branch(False),
                                         operand=None)
-        return (ids[None], dists[None], mask[None], coll_global,
-                cand_global, use_lsh[None])
+        return (ids[None], dists[None], mask[None], route_g.collisions,
+                route_g.cand_est, use_lsh[None])
 
     rep = P()
     sharded = P(data_axis)

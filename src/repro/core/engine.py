@@ -1,0 +1,389 @@
+"""Segment engine — the one estimate→route→partition→search pipeline.
+
+Every index in the repo (static ``HybridLSHIndex``, mesh-sharded
+``core.distributed``, streaming ``DynamicHybridIndex``, and the sharded
+streaming ``streaming.sharded``) is a composition over two concepts:
+
+  * ``Segment``     — a searchable unit exposing its routing terms
+                      (exact collisions, HLL registers or exact distinct
+                      counts, tombstone dead counts, live/scan sizes)
+                      and a fixed-shape search over its rows.
+  * ``QueryEngine`` — owns Algorithm 2 once: gather per-segment terms,
+                      combine them into a ``RouteEstimate``
+                      (``finalize_route``), partition the query batch,
+                      and run both strategies over every segment.
+
+The old static/dynamic estimator split collapses here: a static segment
+is simply one whose dead counts are zero and whose scan size equals its
+live size, so ``finalize_route`` serves both.  The distributed indexes
+reuse the traceable pieces (``Segment.estimate_terms`` +
+``finalize_route`` + ``Segment.search``) inside ``shard_map``, merging
+``SegmentEstimate`` fields across shards with ``psum``/``pmax`` before
+finalizing — host-side partitioning only happens in the single-host
+``QueryEngine.query``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hll as hll_lib
+from repro.core import search as search_lib
+from repro.core.cost_model import CostModel
+from repro.core.lsh.tables import (LSHTables, bucket_counts,
+                                   gather_registers)
+from repro.kernels import ops
+
+__all__ = ["RouteEstimate", "SegmentEstimate", "Segment", "TableSegment",
+           "QueryEngine", "QueryResult", "finalize_route",
+           "partition_indices", "compact_results", "EXT_SENTINEL"]
+
+Scalar = Union[int, float, jax.Array]
+
+EXT_SENTINEL = np.int32(2**31 - 1)   # masked-out slots in reported buffers
+
+
+# ---------------------------------------------------------------------------
+# Route estimate (Algorithm 2 lines 1-4, vectorized over the query batch)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RouteEstimate:
+    """Vectorized output of Algorithm 2 lines 1-4."""
+
+    collisions: jax.Array   # (Q,) int32   exact live sum of bucket sizes
+    cand_est: jax.Array     # (Q,) float32 HLL union estimate of candSize
+    lsh_cost: jax.Array     # (Q,) float32 Eq. (1)
+    linear_cost: Scalar     # scalar       Eq. (2) (traced under shard_map)
+    use_lsh: jax.Array      # (Q,) bool    Algorithm 2 line 4
+
+
+@dataclasses.dataclass
+class SegmentEstimate:
+    """One segment's contribution to the routing estimate.
+
+    Exactly one of ``registers`` / ``merged_registers`` / ``cand_exact``
+    normally carries the candSize term: CSR+HLL segments report raw
+    ``(Q, L, m)`` registers (so the fused merge+estimate kernel applies),
+    cross-shard merges report pre-merged ``(Q, m)`` registers, and
+    sketch-free segments (the delta) report an exact distinct count.  A
+    merged cross-shard estimate may carry both a sketch and an exact
+    term; they are summed.
+    """
+
+    collisions: jax.Array                          # (Q,) exact live
+    dead_collisions: Optional[jax.Array] = None    # (Q,) or None (static)
+    registers: Optional[jax.Array] = None          # (Q, L, m) uint8
+    merged_registers: Optional[jax.Array] = None   # (Q, m)
+    cand_exact: Optional[jax.Array] = None         # (Q,) exact distinct
+    n_live: Scalar = 0    # live rows this segment contributes
+    n_scan: Scalar = 0    # rows its linear scan computes distances over
+
+
+class Segment(Protocol):
+    """Anything the engine can route over (duck-typed; no inheritance)."""
+
+    def estimate_terms(self, qbuckets: jax.Array) -> SegmentEstimate:
+        """(Q, L) query buckets -> this segment's routing terms."""
+        ...
+
+    def search(self, qbuckets: jax.Array, q: jax.Array, r, *,
+               lsh_route: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Fixed-shape search -> sentinel-padded ``(ids, dists, mask)``."""
+        ...
+
+
+def finalize_route(terms: Sequence[SegmentEstimate], cost_model: CostModel,
+                   *, impl: Optional[str] = None,
+                   n_live: Optional[Scalar] = None,
+                   n_scan: Optional[Scalar] = None) -> RouteEstimate:
+    """Combine per-segment terms into the tombstone-aware RouteEstimate.
+
+    collisions = sum of exact live collisions; candSize = sum over
+    segments of (HLL estimate - dead collisions, clamped at 0) plus the
+    exact distinct counts, clamped by the structural bounds (candSize is
+    a distinct count, <= live #collisions and <= n_live).  Static
+    segments simply have zero dead counts.  HLL registers are monotone
+    (they never decrement), so the dead-count subtraction over-corrects
+    slightly — a dead point colliding in several tables is subtracted
+    once per table — making the churned estimate a mild under-estimate,
+    biased toward the LSH route, whose verification step masks dead
+    rows cheaply.  LinearCost is priced at ``n_scan``: the rows the
+    linear route actually computes distances over (tombstoned or padded
+    rows included — masking happens after the scan).
+    """
+    assert terms, "finalize_route needs at least one segment"
+    collisions = terms[0].collisions
+    for t in terms[1:]:
+        collisions = collisions + t.collisions
+    if n_live is None:
+        n_live = sum(t.n_live for t in terms)
+    if n_scan is None:
+        n_scan = sum(t.n_scan for t in terms)
+
+    cand = jnp.zeros_like(collisions, dtype=jnp.float32)
+    for t in terms:
+        if t.registers is not None:
+            est = ops.hll_merge_estimate(t.registers, impl=impl)
+        elif t.merged_registers is not None:
+            est = hll_lib.estimate_from_registers(t.merged_registers)
+        else:
+            est = None
+        if est is not None:
+            if t.dead_collisions is not None:
+                est = jnp.maximum(
+                    est - t.dead_collisions.astype(jnp.float32), 0.0)
+            cand = cand + est
+        if t.cand_exact is not None:
+            cand = cand + t.cand_exact.astype(jnp.float32)
+    n_live_f = (float(n_live) if isinstance(n_live, (int, float))
+                else n_live.astype(jnp.float32))
+    cand = jnp.minimum(cand, jnp.minimum(
+        collisions.astype(jnp.float32), n_live_f))
+    lsh_cost = cost_model.lsh_cost(collisions.astype(jnp.float32), cand)
+    linear_cost = cost_model.linear_cost(n_scan)
+    return RouteEstimate(collisions=collisions, cand_est=cand,
+                         lsh_cost=lsh_cost, linear_cost=linear_cost,
+                         use_lsh=lsh_cost < linear_cost)
+
+
+# ---------------------------------------------------------------------------
+# The CSR+HLL segment (static core and the streaming main segment)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TableSegment:
+    """CSR tables + per-bucket HLLs, with optional tombstones/external ids.
+
+    With the defaults this is the static core's segment: no dead counts,
+    internal ids reported raw.  The streaming main segment supplies
+    ``live``/``tomb_counts`` (tombstone-corrected estimates, dead rows
+    masked after search) and ``ext_ids`` (external ids reported, with
+    ``EXT_SENTINEL`` in masked slots).
+    """
+
+    tables: LSHTables
+    x: Optional[jax.Array] = None       # (n, d) rows; None = estimate-only
+    metric: str = "l2"
+    cap: int = 64
+    live: Optional[jax.Array] = None         # (n + 1,) bool
+    tomb_counts: Optional[jax.Array] = None  # (L, B) int32
+    ext_ids: Optional[jax.Array] = None      # (n,) int32
+    n_live: Optional[Scalar] = None          # defaults to tables.n
+    n_scan: Optional[Scalar] = None          # defaults to #rows scanned
+    impl: Optional[str] = None
+    q_chunk: Optional[int] = None            # None -> min(32, Q)
+
+    def estimate_terms(self, qbuckets: jax.Array) -> SegmentEstimate:
+        counts = bucket_counts(self.tables, qbuckets)       # (Q, L)
+        regs = gather_registers(self.tables, qbuckets)      # (Q, L, m)
+        if self.tomb_counts is None:
+            collisions = jnp.sum(counts, axis=-1)
+            dead = None
+        else:
+            lidx = jnp.arange(self.tables.L)[None, :]
+            d = self.tomb_counts[lidx, qbuckets.astype(jnp.int32)]
+            collisions = jnp.sum(counts - d, axis=-1)
+            dead = jnp.sum(d, axis=-1)
+        n_rows = self.tables.n if self.x is None else self.x.shape[0]
+        n_live = self.tables.n if self.n_live is None else self.n_live
+        n_scan = n_rows if self.n_scan is None else self.n_scan
+        return SegmentEstimate(collisions=collisions, dead_collisions=dead,
+                               registers=regs, n_live=n_live, n_scan=n_scan)
+
+    def search(self, qbuckets: jax.Array, q: jax.Array, r, *,
+               lsh_route: bool):
+        assert self.x is not None, "estimate-only segment has no rows"
+        n = self.x.shape[0]
+        if lsh_route:
+            qc = self.q_chunk or min(32, q.shape[0])
+            ids, dists, mask = search_lib.lsh_search(
+                self.x, self.tables, qbuckets, q, r, self.metric, self.cap,
+                q_chunk=qc)
+        else:
+            ids, dists, mask = search_lib.linear_search(
+                self.x, q, r, self.metric, impl=self.impl)
+        if self.live is not None or self.ext_ids is not None:
+            safe = jnp.clip(ids, 0, n - 1)
+            if self.live is not None:
+                mask = mask & self.live[safe]
+            if self.ext_ids is not None:
+                ids = jnp.where(mask, self.ext_ids[safe], EXT_SENTINEL)
+        return ids, dists, mask
+
+
+# ---------------------------------------------------------------------------
+# Query result + host-side partitioning helpers
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class QueryResult:
+    """Per-strategy buffers + per-query bookkeeping.
+
+    ``neighbors(i)`` extracts the reported ids for query i regardless of
+    which strategy served it.
+    """
+
+    route: RouteEstimate
+    lsh_idx: np.ndarray          # query indices served by LSH search
+    lin_idx: np.ndarray          # query indices served by linear search
+    lsh_out: Optional[tuple]     # (ids, dists, mask) for the LSH group
+    lin_out: Optional[tuple]     # (ids, dists, mask) for the linear group
+    n_queries: int
+
+    def neighbors(self, i: int) -> np.ndarray:
+        for idx, out in ((self.lsh_idx, self.lsh_out),
+                         (self.lin_idx, self.lin_out)):
+            if out is None:
+                continue
+            pos = np.nonzero(np.asarray(idx) == i)[0]
+            if len(pos):
+                ids, _, mask = out
+                row = pos[0]
+                return np.asarray(ids[row])[np.asarray(mask[row])]
+        raise KeyError(i)
+
+    def neighbor_sets(self):
+        return {i: set(self.neighbors(i).tolist())
+                for i in range(self.n_queries)}
+
+    @property
+    def n_linear(self) -> int:
+        """Exact count of queries served by linear search.
+
+        ``lin_idx`` is power-of-two padded by repeating its last entry,
+        so the raw length over-counts — dedup gives the true count.
+        """
+        return len(set(np.asarray(self.lin_idx).tolist()))
+
+    @property
+    def frac_linear(self) -> float:
+        return self.n_linear / max(self.n_queries, 1)
+
+
+def _pad_size(k: int, minimum: int = 8) -> int:
+    """Round group sizes up to powers of two: bounded jit-cache churn."""
+    if k == 0:
+        return 0
+    return max(minimum, 1 << (k - 1).bit_length())
+
+
+def partition_indices(use_lsh: np.ndarray,
+                      minimum: int = 8) -> Tuple[np.ndarray, np.ndarray]:
+    """Split query indices into (lsh_idx, linear_idx), each padded to a
+    power-of-two length by repeating the last index (results for padded
+    slots are discarded by the caller)."""
+    use_lsh = np.asarray(use_lsh)
+    lsh_idx = np.nonzero(use_lsh)[0]
+    lin_idx = np.nonzero(~use_lsh)[0]
+
+    def pad(idx):
+        tgt = _pad_size(len(idx), minimum)
+        if tgt == 0:
+            return idx.astype(np.int32)
+        out = np.full(tgt, idx[-1] if len(idx) else 0, np.int32)
+        out[:len(idx)] = idx
+        return out
+
+    return pad(lsh_idx), pad(lin_idx)
+
+
+def compact_results(ids: jax.Array, dists: jax.Array, mask: jax.Array,
+                    max_out: int):
+    """Compact sentinel-padded (Q, C) results to fixed (Q, max_out).
+
+    Keeps the ``max_out`` nearest reported neighbors per query (exact
+    whenever the true output size <= max_out).
+    """
+    key = jnp.where(mask, dists, jnp.inf)
+    neg, pos = jax.lax.top_k(-key, max_out)
+    take = jnp.take_along_axis
+    return (take(ids, pos, axis=-1), -neg,
+            take(mask, pos, axis=-1) & jnp.isfinite(-neg))
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+class QueryEngine:
+    """Owns the hybrid pipeline once, for any list of segments."""
+
+    def __init__(self, cost_model: CostModel, impl: Optional[str] = None):
+        self.cost_model = cost_model
+        self.impl = impl
+
+    # traceable pieces (also used inside shard_map by the sharded paths)
+    def estimate(self, segments: Sequence[Segment],
+                 qbuckets: jax.Array) -> RouteEstimate:
+        return finalize_route([s.estimate_terms(qbuckets) for s in segments],
+                              self.cost_model, impl=self.impl)
+
+    def search_group(self, segments: Sequence[Segment], qbuckets: jax.Array,
+                     q: jax.Array, r, *, lsh_route: bool):
+        """Search every segment for one routed group; concat the buffers."""
+        parts = [s.search(qbuckets, q, r, lsh_route=lsh_route)
+                 for s in segments]
+        if len(parts) == 1:
+            return parts[0]
+        return tuple(jnp.concatenate([p[i] for p in parts], axis=-1)
+                     for i in range(3))
+
+    # host-side pipeline (single-host indexes)
+    def query(self, segments: Sequence[Segment], queries: jax.Array,
+              qbuckets: jax.Array, r: float,
+              force: Optional[str] = None) -> QueryResult:
+        """Hybrid r-NN reporting over the segments.
+
+        force: None (hybrid routing) | "lsh" | "linear" — the two
+        baselines of the paper's Figure 2.
+        """
+        nq = queries.shape[0]
+        route = self.estimate(segments, qbuckets)
+        if force == "lsh":
+            use = np.ones(nq, bool)
+        elif force == "linear":
+            use = np.zeros(nq, bool)
+        else:
+            use = np.asarray(route.use_lsh)
+        lsh_idx, lin_idx = partition_indices(use)
+
+        lsh_out = lin_out = None
+        if len(lsh_idx):
+            lsh_out = self.search_group(segments, qbuckets[lsh_idx],
+                                        queries[lsh_idx], float(r),
+                                        lsh_route=True)
+        if len(lin_idx):
+            lin_out = self.search_group(segments, qbuckets[lin_idx],
+                                        queries[lin_idx], float(r),
+                                        lsh_route=False)
+        return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
+                           lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
+
+
+# ---------------------------------------------------------------------------
+# Compatibility wrappers (the pre-engine estimator entry points)
+# ---------------------------------------------------------------------------
+def estimate_routes(tables: LSHTables, qbuckets: jax.Array,
+                    cost_model: CostModel, n: int,
+                    impl: Optional[str] = None) -> RouteEstimate:
+    """O(m*L) per query, independent of bucket sizes (the paper's point)."""
+    seg = TableSegment(tables=tables, n_live=n, n_scan=n)
+    return finalize_route([seg.estimate_terms(qbuckets)], cost_model,
+                          impl=impl)
+
+
+def estimate_routes_dynamic(tables: LSHTables, qbuckets: jax.Array,
+                            cost_model: CostModel, n_live: int, *,
+                            tomb_counts: jax.Array,
+                            delta_collisions: jax.Array,
+                            delta_distinct: jax.Array,
+                            n_scan: Optional[int] = None,
+                            impl: Optional[str] = None) -> RouteEstimate:
+    """Tombstone-corrected Algorithm 2 for a main+delta segment pair."""
+    main = TableSegment(tables=tables, tomb_counts=tomb_counts)
+    delta = SegmentEstimate(collisions=delta_collisions,
+                            cand_exact=delta_distinct)
+    return finalize_route([main.estimate_terms(qbuckets), delta], cost_model,
+                          impl=impl, n_live=n_live,
+                          n_scan=n_live if n_scan is None else n_scan)

@@ -1,68 +1,30 @@
 """HybridLSHIndex — the paper's data structure as a single-host module.
 
 Build (Algorithm 1): hash all points into L CSR tables, fusing the
-per-bucket HyperLogLog build.  Query (Algorithm 2): estimate per-query
-LSHCost from bucket sizes + merged HLLs, route each query to LSH-based
-or linear search, execute both groups as fixed-shape batches.
+per-bucket HyperLogLog build.  Query (Algorithm 2): one static
+``TableSegment`` handed to the shared ``QueryEngine``, which estimates
+per-query LSHCost from bucket sizes + merged HLLs, routes each query to
+LSH-based or linear search, and executes both groups as fixed-shape
+batches.
 
 The distributed (mesh-sharded) variant lives in ``core.distributed``;
-the serving integration in ``serve.retrieval``.
+the streaming variant in ``streaming.index``; the serving integration
+in ``serve.retrieval``.  All of them compose the same engine.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import search as search_lib
 from repro.core.cost_model import CostModel
-from repro.core.lsh import families as fam_lib
+from repro.core.engine import (QueryEngine, QueryResult, RouteEstimate,
+                               TableSegment)
 from repro.core.lsh.tables import LSHTables, build_tables
-from repro.core.router import (RouteEstimate, estimate_routes,
-                               partition_indices)
 
 __all__ = ["HybridLSHIndex", "QueryResult"]
-
-
-@dataclasses.dataclass
-class QueryResult:
-    """Per-strategy buffers + per-query bookkeeping.
-
-    ``neighbors(i)`` extracts the reported ids for query i regardless of
-    which strategy served it.
-    """
-
-    route: RouteEstimate
-    lsh_idx: np.ndarray          # query indices served by LSH search
-    lin_idx: np.ndarray          # query indices served by linear search
-    lsh_out: Optional[tuple]     # (ids, dists, mask) for the LSH group
-    lin_out: Optional[tuple]     # (ids, dists, mask) for the linear group
-    n_queries: int
-
-    def neighbors(self, i: int) -> np.ndarray:
-        for idx, out in ((self.lsh_idx, self.lsh_out),
-                         (self.lin_idx, self.lin_out)):
-            if out is None:
-                continue
-            pos = np.nonzero(np.asarray(idx) == i)[0]
-            if len(pos):
-                ids, _, mask = out
-                row = pos[0]
-                return np.asarray(ids[row])[np.asarray(mask[row])]
-        raise KeyError(i)
-
-    def neighbor_sets(self):
-        return {i: set(self.neighbors(i).tolist())
-                for i in range(self.n_queries)}
-
-    @property
-    def frac_linear(self) -> float:
-        served_lin = len(set(np.asarray(self.lin_idx).tolist()))
-        return served_lin / max(self.n_queries, 1)
 
 
 class HybridLSHIndex:
@@ -84,6 +46,7 @@ class HybridLSHIndex:
         self.impl = impl
         self.x: Optional[jax.Array] = None
         self.tables: Optional[LSHTables] = None
+        self._engine = QueryEngine(cost_model, impl=impl)
         self._bucket_fn = jax.jit(functools.partial(
             self.family.bucket_ids, num_buckets=self.num_buckets))
 
@@ -105,11 +68,16 @@ class HybridLSHIndex:
         return self
 
     # ------------------------------------------------------------------
+    def _segment(self) -> TableSegment:
+        assert self.tables is not None, "index is empty: build first"
+        return TableSegment(tables=self.tables, x=self.x,
+                            metric=self.family.metric, cap=self.cap,
+                            impl=self.impl, n_live=self.n, n_scan=self.n)
+
     def estimate(self, queries: jax.Array) -> RouteEstimate:
         """Algorithm 2 lines 1-4, vectorized over the query batch."""
         qb = self._bucket_fn(self.params, queries)
-        return estimate_routes(self.tables, qb, self.cost_model, self.n,
-                               impl=self.impl)
+        return self._engine.estimate([self._segment()], qb)
 
     def query(self, queries: jax.Array, r: float,
               force: Optional[str] = None) -> QueryResult:
@@ -119,34 +87,16 @@ class HybridLSHIndex:
         baselines of the paper's Figure 2.
         """
         queries = jnp.asarray(queries)
-        nq = queries.shape[0]
-        route = self.estimate(queries)
-        if force == "lsh":
-            use = np.ones(nq, bool)
-        elif force == "linear":
-            use = np.zeros(nq, bool)
-        else:
-            use = np.asarray(route.use_lsh)
-        lsh_idx, lin_idx = partition_indices(use)
-
-        lsh_out = lin_out = None
-        if len(lsh_idx):
-            sub = queries[lsh_idx]
-            qb = self._bucket_fn(self.params, sub)
-            lsh_out = search_lib.lsh_search(
-                self.x, self.tables, qb, sub, float(r),
-                self.family.metric, self.cap,
-                q_chunk=min(32, len(lsh_idx)))
-        if len(lin_idx):
-            lin_out = search_lib.linear_search(
-                self.x, queries[lin_idx], float(r), self.family.metric,
-                impl=self.impl)
-        return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
-                           lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
+        qb = self._bucket_fn(self.params, queries)
+        return self._engine.query([self._segment()], queries, qb, float(r),
+                                  force=force)
 
     # ------------------------------------------------------------------
     def memory_stats(self) -> Dict[str, Any]:
         t = self.tables
+        if t is None:   # not built yet: report an empty footprint
+            return {"perm_bytes": 0, "starts_bytes": 0, "hll_bytes": 0,
+                    "hll_overhead_vs_data": 0.0}
         return {
             "perm_bytes": t.perm.size * 4,
             "starts_bytes": t.starts.size * 4,

@@ -1,5 +1,10 @@
-"""Hybrid router (Algorithm 2): estimate LSHCost, compare to LinearCost,
-pick the strategy.
+"""Hybrid router (Algorithm 2) — compatibility surface.
+
+The actual pipeline lives in ``repro.core.engine`` since the
+segment-engine refactor: ``finalize_route`` is the one tombstone-aware
+estimate path (dead counts zero for static segments), and
+``QueryEngine`` owns estimate→route→partition→search.  This module
+re-exports the public names so existing imports keep working.
 
 On TPU the per-query ``if`` of Algorithm 2 becomes *batch partitioning*:
 the estimator runs vectorized over the query batch, then the batch is
@@ -9,127 +14,9 @@ both branches densely — partitioning is the performance-correct port.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.cost_model import CostModel
-from repro.core.lsh.tables import LSHTables, bucket_counts, gather_registers
-from repro.kernels import ops
+from repro.core.engine import (RouteEstimate, _pad_size, compact_results,
+                               estimate_routes, estimate_routes_dynamic,
+                               finalize_route, partition_indices)
 
 __all__ = ["RouteEstimate", "estimate_routes", "estimate_routes_dynamic",
-           "partition_indices", "compact_results"]
-
-
-@dataclasses.dataclass
-class RouteEstimate:
-    """Vectorized output of Algorithm 2 lines 1-4."""
-
-    collisions: jax.Array   # (Q,) int32   exact  sum of bucket sizes
-    cand_est: jax.Array     # (Q,) float32 HLL union estimate of candSize
-    lsh_cost: jax.Array     # (Q,) float32 Eq. (1)
-    linear_cost: float      # scalar       Eq. (2)
-    use_lsh: jax.Array      # (Q,) bool    Algorithm 2 line 4
-
-
-def estimate_routes(tables: LSHTables, qbuckets: jax.Array,
-                    cost_model: CostModel, n: int,
-                    impl: Optional[str] = None) -> RouteEstimate:
-    """O(m*L) per query, independent of bucket sizes (the paper's point)."""
-    counts = bucket_counts(tables, qbuckets)            # (Q, L)
-    collisions = jnp.sum(counts, axis=-1)
-    regs = gather_registers(tables, qbuckets)           # (Q, L, m)
-    cand_est = ops.hll_merge_estimate(regs, impl=impl)  # (Q,)
-    # candSize can never exceed #collisions (it's the distinct count)
-    # nor n — clamp the estimator with both structural bounds.
-    cand_est = jnp.minimum(cand_est, jnp.minimum(
-        collisions.astype(jnp.float32), float(n)))
-    lsh_cost = cost_model.lsh_cost(collisions.astype(jnp.float32), cand_est)
-    linear_cost = float(cost_model.linear_cost(n))
-    return RouteEstimate(collisions=collisions, cand_est=cand_est,
-                         lsh_cost=lsh_cost, linear_cost=linear_cost,
-                         use_lsh=lsh_cost < linear_cost)
-
-
-def estimate_routes_dynamic(tables: LSHTables, qbuckets: jax.Array,
-                            cost_model: CostModel, n_live: int, *,
-                            tomb_counts: jax.Array,
-                            delta_collisions: jax.Array,
-                            delta_distinct: jax.Array,
-                            n_scan: Optional[int] = None,
-                            impl: Optional[str] = None) -> RouteEstimate:
-    """Tombstone-corrected Algorithm 2 for the streaming index.
-
-    The main segment's CSR sizes and HLLs still include tombstoned rows
-    (both are immutable), so the estimate is corrected on the fly:
-
-      collisions = (CSR sizes - per-bucket dead counts)  [exact, main]
-                   + delta collisions                    [exact, delta]
-      candSize   = max(HLL union - dead collisions, 0)   [see CostModel
-                   + exact delta distinct                 .corrected_cand_size]
-
-    LinearCost is priced at ``n_scan`` — the rows the linear route
-    actually computes distances over (all main rows, tombstoned or not,
-    plus occupied delta slots; masking happens after the scan).  It
-    defaults to ``n_live``, which under-prices linear under heavy
-    un-compacted churn — pass the true scan size when available.
-    """
-    counts = bucket_counts(tables, qbuckets)            # (Q, L)
-    lidx = jnp.arange(tables.L)[None, :]
-    dead = tomb_counts[lidx, qbuckets.astype(jnp.int32)]  # (Q, L)
-    collisions = jnp.sum(counts - dead, axis=-1) + delta_collisions
-    regs = gather_registers(tables, qbuckets)           # (Q, L, m)
-    cand_main = ops.hll_merge_estimate(regs, impl=impl)  # (Q,)
-    cand_est = cost_model.corrected_cand_size(
-        cand_main, jnp.sum(dead, axis=-1), delta_distinct, collisions,
-        n_live)
-    lsh_cost = cost_model.lsh_cost(collisions.astype(jnp.float32), cand_est)
-    linear_cost = float(cost_model.linear_cost(
-        n_live if n_scan is None else n_scan))
-    return RouteEstimate(collisions=collisions, cand_est=cand_est,
-                         lsh_cost=lsh_cost, linear_cost=linear_cost,
-                         use_lsh=lsh_cost < linear_cost)
-
-
-def _pad_size(k: int, minimum: int = 8) -> int:
-    """Round group sizes up to powers of two: bounded jit-cache churn."""
-    if k == 0:
-        return 0
-    return max(minimum, 1 << (k - 1).bit_length())
-
-
-def partition_indices(use_lsh: np.ndarray,
-                      minimum: int = 8) -> Tuple[np.ndarray, np.ndarray]:
-    """Split query indices into (lsh_idx, linear_idx), each padded to a
-    power-of-two length by repeating the last index (results for padded
-    slots are discarded by the caller)."""
-    use_lsh = np.asarray(use_lsh)
-    lsh_idx = np.nonzero(use_lsh)[0]
-    lin_idx = np.nonzero(~use_lsh)[0]
-
-    def pad(idx):
-        tgt = _pad_size(len(idx), minimum)
-        if tgt == 0:
-            return idx.astype(np.int32)
-        out = np.full(tgt, idx[-1] if len(idx) else 0, np.int32)
-        out[:len(idx)] = idx
-        return out
-
-    return pad(lsh_idx), pad(lin_idx)
-
-
-def compact_results(ids: jax.Array, dists: jax.Array, mask: jax.Array,
-                    max_out: int):
-    """Compact sentinel-padded (Q, C) results to fixed (Q, max_out).
-
-    Keeps the ``max_out`` nearest reported neighbors per query (exact
-    whenever the true output size <= max_out).
-    """
-    key = jnp.where(mask, dists, jnp.inf)
-    neg, pos = jax.lax.top_k(-key, max_out)
-    take = jnp.take_along_axis
-    return (take(ids, pos, axis=-1), -neg,
-            take(mask, pos, axis=-1) & jnp.isfinite(-neg))
+           "finalize_route", "partition_indices", "compact_results"]

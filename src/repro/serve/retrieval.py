@@ -3,28 +3,32 @@ feature of the serving path.
 
 An LM (any of the 10 archs) encodes requests to normalized embeddings
 (models.transformer.forward_embed); the corpus embeddings live in a
-DynamicHybridIndex (cosine/SimHash by default) — the streaming variant,
-so a serving corpus mutates live via ``add_documents`` /
-``remove_documents`` instead of full rebuilds.  Every retrieval request
-goes through the paper's Algorithm 2 with the tombstone-corrected
-estimate, then runs LSH-based or linear search per query group.
+streaming index (cosine/SimHash by default), so a serving corpus
+mutates live via ``add_documents`` / ``remove_documents`` instead of
+full rebuilds.  With ``RetrievalConfig.mesh`` set, the corpus is
+row-sharded over the mesh's data axis (``ShardedDynamicHybridIndex``);
+otherwise the single-host ``DynamicHybridIndex`` serves.  Either way
+every retrieval request goes through the paper's Algorithm 2 via the
+shared segment engine, with the tombstone-corrected estimate.
 ``stats`` exposes routing decisions and compaction counters.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core import CostModel
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
-from repro.streaming import CompactionPolicy, DynamicHybridIndex
+from repro.streaming import (CompactionPolicy, DynamicHybridIndex,
+                             ShardedDynamicHybridIndex)
 
 
 @dataclasses.dataclass
@@ -40,6 +44,11 @@ class RetrievalConfig:
     delta_capacity: int = 4096
     compact_delta_fill: float = 1.0
     compact_tombstone_ratio: float = 0.25
+    # Mesh sharding: set to shard the corpus over `mesh_axis`.
+    mesh: Optional[Mesh] = None
+    mesh_axis: str = "data"
+    shard_routing: str = "global"  # or "per_shard" (density-adaptive)
+    shard_max_out: int = 512       # reported neighbors per (shard, query)
 
 
 class RetrievalService:
@@ -50,7 +59,8 @@ class RetrievalService:
         self.cfg, self.par, self.params, self.rcfg = cfg, par, params, rcfg
         self._embed = jax.jit(
             lambda p, b: forward_embed(p, b, cfg, par))
-        self.index: Optional[DynamicHybridIndex] = None
+        self.index: Optional[Union[DynamicHybridIndex,
+                                   ShardedDynamicHybridIndex]] = None
         self._queries_served = 0
         self._linear_served = 0
 
@@ -66,13 +76,19 @@ class RetrievalService:
         r = self.rcfg
         fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
                           r=r.radius, delta=r.delta)
-        self.index = DynamicHybridIndex(
-            fam, num_buckets=r.num_buckets, m=r.hll_m, cap=r.cap,
+        common = dict(
+            num_buckets=r.num_buckets, m=r.hll_m, cap=r.cap,
             delta_capacity=r.delta_capacity,
             cost_model=CostModel(alpha=1.0, beta=r.beta_over_alpha),
             policy=CompactionPolicy(
                 delta_fill=r.compact_delta_fill,
                 tombstone_ratio=r.compact_tombstone_ratio))
+        if r.mesh is not None:
+            self.index = ShardedDynamicHybridIndex(
+                fam, mesh=r.mesh, data_axis=r.mesh_axis,
+                routing=r.shard_routing, max_out=r.shard_max_out, **common)
+        else:
+            self.index = DynamicHybridIndex(fam, **common)
         self.index.build(corpus)
         return corpus.shape[0]
 
@@ -81,8 +97,8 @@ class RetrievalService:
                       batches: Iterable[Dict[str, jax.Array]]) -> np.ndarray:
         """Embed + insert new documents; returns their doc ids.
 
-        Inserts land in the delta segment (no rebuild); compaction folds
-        them into the main segment per the configured policy.
+        Inserts land in the delta segment(s) (no rebuild); compaction
+        folds them into the main segment per the configured policy.
         """
         assert self.index is not None, "call index_corpus first"
         return self.index.insert(self._embed_corpus(batches))
@@ -94,18 +110,21 @@ class RetrievalService:
 
     def query(self, batch: Dict[str, jax.Array],
               radius: Optional[float] = None):
-        """Returns (QueryResult, embeddings)."""
+        """Returns (QueryResult | ShardedQueryResult, embeddings)."""
         assert self.index is not None, "call index_corpus first"
         q = self.embed(batch)
         res = self.index.query(q, radius or self.rcfg.radius)
         self._queries_served += res.n_queries
-        self._linear_served += int(res.frac_linear * res.n_queries)
+        # exact per-query linear count from the route partition (the
+        # frac_linear*n round-trip drifts under rounding)
+        self._linear_served += res.n_linear
         return res, q
 
     @property
     def stats(self) -> Dict[str, float]:
         served = max(self._queries_served, 1)
         out = {"queries": self._queries_served,
+               "linear_served": self._linear_served,
                "frac_linear": self._linear_served / served,
                "index_size": self.index.n if self.index else 0}
         if self.index is not None:

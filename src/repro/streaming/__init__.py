@@ -3,18 +3,25 @@ static Hybrid LSH core.
 
   * ``DynamicHybridIndex``  — main segment + delta segment + tombstones,
                               with HLL-aware compaction
+  * ``ShardedDynamicHybridIndex`` — the same segment state per mesh
+                              shard, pmax-merged HLL routing estimates,
+                              per-shard compaction (streaming.sharded)
   * ``streaming.delta``     — fixed-capacity append-only delta segment
+                              (+ its engine ``DeltaView`` adapter)
   * ``streaming.tombstones``— main-segment tombstone bitmap + per-bucket
-                              dead counts (the router's correction term)
+                              dead counts (the engine's correction term)
   * ``streaming.segment``   — immutable main segment (Algorithm 1 build)
   * ``streaming.compaction``— trigger policy + compaction stats
 """
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
-from repro.streaming.delta import DeltaSegment, make_delta
+from repro.streaming.delta import DeltaSegment, DeltaView, make_delta
 from repro.streaming.index import DynamicHybridIndex
 from repro.streaming.segment import MainSegment, build_main
+from repro.streaming.sharded import (ShardedDynamicHybridIndex,
+                                     ShardedQueryResult)
 from repro.streaming.tombstones import Tombstones, make_tombstones
 
-__all__ = ["DynamicHybridIndex", "CompactionPolicy", "CompactionStats",
-           "DeltaSegment", "make_delta", "MainSegment", "build_main",
-           "Tombstones", "make_tombstones"]
+__all__ = ["DynamicHybridIndex", "ShardedDynamicHybridIndex",
+           "ShardedQueryResult", "CompactionPolicy", "CompactionStats",
+           "DeltaSegment", "DeltaView", "make_delta", "MainSegment",
+           "build_main", "Tombstones", "make_tombstones"]

@@ -39,16 +39,19 @@ class CompactionStats:
     compactions: int = 0
     last_reason: Optional[str] = None
     last_seconds: float = 0.0
+    total_seconds: float = 0.0  # cumulative wall-clock spent compacting
     rows_dropped: int = 0       # tombstoned rows reclaimed, cumulative
 
     def record(self, reason: str, t0: float, dropped: int) -> None:
         self.compactions += 1
         self.last_reason = reason
         self.last_seconds = time.perf_counter() - t0
+        self.total_seconds += self.last_seconds
         self.rows_dropped += int(dropped)
 
     def as_dict(self) -> Dict[str, object]:
         return {"compactions": self.compactions,
                 "last_reason": self.last_reason,
                 "last_seconds": self.last_seconds,
+                "total_seconds": self.total_seconds,
                 "rows_dropped": self.rows_dropped}

@@ -21,13 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import EXT_SENTINEL, SegmentEstimate
 from repro.kernels import ops
 
-__all__ = ["DeltaSegment", "make_delta", "insert", "kill",
+__all__ = ["DeltaSegment", "DeltaView", "make_delta", "insert", "kill",
            "collision_stats", "search"]
 
 
@@ -85,6 +87,35 @@ def kill(delta: DeltaSegment, slots: jax.Array,
     """Tombstone delta slots (padded batch; trash row absorbs padding)."""
     idx = jnp.where(valid, slots, delta.capacity)
     return dataclasses.replace(delta, live=delta.live.at[idx].set(False))
+
+
+@dataclasses.dataclass
+class DeltaView:
+    """Engine ``Segment`` adapter for the exact, sketch-free delta.
+
+    Counts are exact (no HLL, no dead-count correction), so its
+    ``SegmentEstimate`` carries ``cand_exact`` only.  ``n_live``/
+    ``n_scan`` are supplied by the owner: host ints for the single-host
+    index, traced scalars inside ``shard_map``.
+    """
+
+    delta: DeltaSegment
+    metric: str
+    impl: Optional[str] = None
+    n_live: Union[int, jax.Array] = 0
+    n_scan: Union[int, jax.Array] = 0
+
+    def estimate_terms(self, qbuckets: jax.Array) -> SegmentEstimate:
+        coll, dist = collision_stats(self.delta, qbuckets)
+        return SegmentEstimate(collisions=coll, cand_exact=dist,
+                               n_live=self.n_live, n_scan=self.n_scan)
+
+    def search(self, qbuckets: jax.Array, q: jax.Array, r, *,
+               lsh_route: bool):
+        ids, dists, mask = search(self.delta, qbuckets, q, r, self.metric,
+                                  require_collision=lsh_route,
+                                  impl=self.impl)
+        return jnp.where(mask, ids, EXT_SENTINEL), dists, mask
 
 
 @jax.jit

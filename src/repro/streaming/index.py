@@ -12,29 +12,28 @@ Segment architecture (LSM-flavoured, one level):
     (``CompactionPolicy``), live rows from both segments are folded into
     a fresh main segment via ``build_tables``.
 
-Queries run Algorithm 2 with the tombstone-corrected estimate
-(``router.estimate_routes_dynamic``), search both segments with the
-static kernels (``lsh_search``/``linear_search`` on main, an exact
-masked scan on the small delta), mask tombstones, and report *external*
-document ids.  A mixed insert/delete workload therefore reports exactly
-the candidates a fresh ``HybridLSHIndex.build()`` on the surviving
-corpus would (same family parameters, cap permitting).
+Queries hand both segments to the shared ``QueryEngine``
+(``core.engine``): the main segment as a tombstone-aware
+``TableSegment`` (corrected estimates, dead rows masked after search,
+*external* ids reported), the delta as the exact ``DeltaView``.  A
+mixed insert/delete workload therefore reports exactly the candidates a
+fresh ``HybridLSHIndex.build()`` on the surviving corpus would (same
+family parameters, cap permitting).  The mesh-sharded variant lives in
+``streaming.sharded``.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import search as search_lib
 from repro.core.cost_model import CostModel
-from repro.core.index import QueryResult
+from repro.core.engine import (QueryEngine, QueryResult, RouteEstimate,
+                               TableSegment, _pad_size)
 from repro.core.lsh.tables import LSHTables
-from repro.core.router import (RouteEstimate, _pad_size,
-                               estimate_routes_dynamic, partition_indices)
 from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
@@ -42,7 +41,6 @@ from repro.streaming.segment import MainSegment, build_main
 
 __all__ = ["DynamicHybridIndex"]
 
-_EXT_SENTINEL = np.int32(2**31 - 1)  # masked-out slots in reported buffers
 _pad_pow2 = _pad_size                # same pow2 padding as the router groups
 
 
@@ -65,6 +63,7 @@ class DynamicHybridIndex:
         self.cost_model = cost_model
         self.policy = policy
         self.impl = impl
+        self._engine = QueryEngine(cost_model, impl=impl)
         self._bucket_fn = jax.jit(functools.partial(
             self.family.bucket_ids, num_buckets=self.num_buckets))
 
@@ -256,82 +255,34 @@ class DynamicHybridIndex:
         self.stats.record(reason, t0, dropped)
 
     # ------------------------------------------------------------- query
+    def _segments(self) -> List:
+        """Both segments as engine ``Segment`` adapters (main may be absent)."""
+        segs: List = []
+        metric = self.family.metric
+        if self.main is not None:
+            segs.append(TableSegment(
+                tables=self.main.tables, x=self.main.x, metric=metric,
+                cap=self.cap, impl=self.impl, live=self.tomb.live,
+                tomb_counts=self.tomb.counts, ext_ids=self.main.ids,
+                n_live=self._n_main_live, n_scan=self.main.n))
+        segs.append(delta_lib.DeltaView(
+            self.delta, metric, impl=self.impl,
+            n_live=self._n_delta_live, n_scan=int(self.delta.count)))
+        return segs
+
     def estimate(self, queries: jax.Array) -> RouteEstimate:
         assert self.delta is not None, "index is empty: build/insert first"
-        return self._estimate(self._bucket_fn(self.params,
-                                              jnp.asarray(queries)))
-
-    def _estimate(self, qb: jax.Array) -> RouteEstimate:
-        d_coll, d_dist = delta_lib.collision_stats(self.delta, qb)
-        n_scan = int(self.delta.count)  # occupied delta slots
-        if self.main is not None:
-            return estimate_routes_dynamic(
-                self.main.tables, qb, self.cost_model, self.n,
-                tomb_counts=self.tomb.counts, delta_collisions=d_coll,
-                delta_distinct=d_dist, n_scan=self.main.n + n_scan,
-                impl=self.impl)
-        # Delta-only index: counts are exact, no correction needed.
-        lsh_cost = self.cost_model.lsh_cost(d_coll.astype(jnp.float32),
-                                            d_dist.astype(jnp.float32))
-        linear_cost = float(self.cost_model.linear_cost(n_scan))
-        return RouteEstimate(collisions=d_coll,
-                             cand_est=d_dist.astype(jnp.float32),
-                             lsh_cost=lsh_cost, linear_cost=linear_cost,
-                             use_lsh=lsh_cost < linear_cost)
+        qb = self._bucket_fn(self.params, jnp.asarray(queries))
+        return self._engine.estimate(self._segments(), qb)
 
     def query(self, queries: jax.Array, r: float,
               force: Optional[str] = None) -> QueryResult:
         """Hybrid r-NN reporting over both segments; ids are external."""
         assert self.delta is not None, "index is empty: build/insert first"
         queries = jnp.asarray(queries)
-        nq = queries.shape[0]
         qb = self._bucket_fn(self.params, queries)
-        route = self._estimate(qb)
-        if force == "lsh":
-            use = np.ones(nq, bool)
-        elif force == "linear":
-            use = np.zeros(nq, bool)
-        else:
-            use = np.asarray(route.use_lsh)
-        lsh_idx, lin_idx = partition_indices(use)
-
-        lsh_out = lin_out = None
-        if len(lsh_idx):
-            lsh_out = self._search_group(queries[lsh_idx], qb[lsh_idx], r,
-                                         lsh_route=True)
-        if len(lin_idx):
-            lin_out = self._search_group(queries[lin_idx], qb[lin_idx], r,
-                                         lsh_route=False)
-        return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
-                           lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
-
-    def _search_group(self, q: jax.Array, qb: jax.Array, r: float,
-                      lsh_route: bool):
-        """Search main + delta for one routed group; concat the buffers."""
-        metric = self.family.metric
-        parts = []
-        if self.main is not None:
-            n = self.main.n
-            if lsh_route:
-                ids, dists, mask = search_lib.lsh_search(
-                    self.main.x, self.main.tables, qb, q, float(r), metric,
-                    self.cap, q_chunk=min(32, q.shape[0]))
-            else:
-                ids, dists, mask = search_lib.linear_search(
-                    self.main.x, q, float(r), metric, impl=self.impl)
-            safe = jnp.clip(ids, 0, n - 1)
-            mask = mask & self.tomb.live[safe]
-            ext = jnp.where(mask, self.main.ids[safe], _EXT_SENTINEL)
-            parts.append((ext, dists, mask))
-        d_ids, d_dists, d_mask = delta_lib.search(
-            self.delta, qb, q, float(r), metric,
-            require_collision=lsh_route, impl=self.impl)
-        d_ids = jnp.where(d_mask, d_ids, _EXT_SENTINEL)
-        parts.append((d_ids, d_dists, d_mask))
-        if len(parts) == 1:
-            return parts[0]
-        return tuple(jnp.concatenate([p[i] for p in parts], axis=-1)
-                     for i in range(3))
+        return self._engine.query(self._segments(), queries, qb, float(r),
+                                  force=force)
 
     # ------------------------------------------------------ observability
     def index_stats(self) -> Dict[str, object]:

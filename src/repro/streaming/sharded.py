@@ -1,0 +1,682 @@
+"""ShardedDynamicHybridIndex — the streaming index over the mesh.
+
+The fourth scenario the segment engine enables: every shard of the
+``data`` axis owns a full dynamic-index worth of segment state —
+
+  * main   — per-shard CSR tables + HLLs built by the ``build_tables``
+             fusion over a *padded* row block.  Pad rows are hashed to
+             bucket ``B`` (one past the bucket space), which the CSR
+             ``segment_sum`` and the HLL ``segment_max`` drop exactly:
+             padding costs capacity, never correctness.  HLLs are keyed
+             on globally-unique internal ids (shard * n_pad + row), so
+             a ``pmax`` of merged registers is the exact distinct-union
+             sketch across shards — the paper's per-table merge,
+             extended over the mesh.
+  * tomb   — per-shard live bitmap + per-(table, bucket) dead counts
+             (the engine's tombstone correction terms).
+  * delta  — per-shard fixed-capacity delta segment; inserts/deletes
+             are the same fused ``.at[]`` scatters as the single-host
+             index, applied under ``shard_map``.
+
+Queries run one ``shard_map``: each shard builds its engine segments
+(``TableSegment`` + ``DeltaView``), merges ``SegmentEstimate`` terms
+across shards (``psum`` collisions/dead/exact, ``pmax`` registers),
+finalizes global and local routes via the shared ``finalize_route``,
+and picks a strategy per the routing policy:
+
+  * ``"global"``    — one decision from the mesh-wide Eq.(1)/(2) costs;
+  * ``"per_shard"`` — each shard compares its local costs: the shard
+    holding a dense cluster scans linearly while the others use LSH
+    (query-adaptive parameter choice generalized to local density skew).
+
+Compaction folds each shard's live main + delta rows into a fresh
+padded main segment — per shard, through the same ``build_tables``
+fusion, with no cross-shard row movement.  Reported ids are external;
+after any churn the reported sets match a fresh single-host
+``DynamicHybridIndex.build()`` on the surviving corpus per route.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.cost_model import CostModel
+from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
+                               _pad_size, compact_results, finalize_route)
+from repro.core.lsh.tables import LSHTables, build_tables
+from repro.core import hll as hll_lib
+from repro.streaming import delta as delta_lib
+from repro.streaming import tombstones as tomb_lib
+from repro.streaming.compaction import CompactionPolicy, CompactionStats
+
+__all__ = ["ShardedDynamicHybridIndex", "ShardedQueryResult"]
+
+
+@dataclasses.dataclass
+class ShardedQueryResult:
+    """Union-over-shards reporting buffers + routing diagnostics."""
+
+    ids: np.ndarray         # (S, Q, max_out) external doc ids
+    dists: np.ndarray       # (S, Q, max_out)
+    mask: np.ndarray        # (S, Q, max_out) reported r-near neighbors
+    collisions: np.ndarray  # (Q,) global live collisions
+    cand_est: np.ndarray    # (Q,) global corrected candSize estimate
+    used_lsh: np.ndarray    # (S,) per-shard strategy decision
+    n_queries: int
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return self.ids[:, i][self.mask[:, i]]
+
+    def neighbor_sets(self):
+        return {i: set(self.neighbors(i).tolist())
+                for i in range(self.n_queries)}
+
+    @property
+    def frac_linear(self) -> float:
+        return float((~self.used_lsh).mean())
+
+    @property
+    def n_linear(self) -> int:
+        """Queries served by linear search, scaled by the shard vote.
+
+        Sharded routing is per-(batch, shard), so the exact per-query
+        count of the single-host index degenerates to the shard
+        fraction here.
+        """
+        return round(self.n_queries * self.frac_linear)
+
+
+class ShardedDynamicHybridIndex:
+    """Streaming Hybrid LSH index, row-sharded over a mesh axis."""
+
+    def __init__(self, family, *, num_buckets: int, mesh: Mesh, m: int = 64,
+                 cap: int = 64, delta_capacity: int = 1024,
+                 cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
+                 policy: CompactionPolicy = CompactionPolicy(),
+                 routing: str = "per_shard", max_out: int = 512,
+                 data_axis: str = "data", key: jax.Array | int = 0,
+                 impl: Optional[str] = None):
+        assert routing in ("global", "per_shard"), routing
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self.family = family
+        self.params = family.init(key)
+        self.num_buckets = int(num_buckets)
+        self.m = int(m)
+        self.cap = int(cap)
+        self.delta_capacity = int(delta_capacity)
+        self.cost_model = cost_model
+        self.policy = policy
+        self.routing = routing
+        self.max_out = int(max_out)
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.shards = int(mesh.shape[data_axis])
+        self.impl = impl
+        self._engine = QueryEngine(cost_model, impl=impl)
+        self._shard = NamedSharding(mesh, P(data_axis))
+        self.stats = CompactionStats()
+
+        # device leaves (leading dim = shard axis); None until first use
+        self._main = None     # dict: x, ids, bucket_ids, perm, starts,
+        #                       registers, live, tomb_counts
+        self._delta = None    # dict: x, bucket_ids, ids, live, count
+        self._n_pad = 0       # per-shard main capacity (rows incl. pads)
+        self._d = None        # row width
+        self._dtype = None
+
+        # host bookkeeping
+        self._loc: Dict[int, tuple] = {}   # ext -> (shard, "m"|"d", pos)
+        self._next_id = 0
+        S = self.shards
+        self._main_rows_s = np.zeros(S, np.int64)   # real rows (incl. dead)
+        self._main_live_s = np.zeros(S, np.int64)
+        self._delta_count_s = np.zeros(S, np.int64)
+        self._delta_live_s = np.zeros(S, np.int64)
+        self._inserts = 0
+        self._deletes = 0
+        self._fn_cache: Dict[tuple, object] = {}
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def n(self) -> int:
+        return int(self._main_live_s.sum() + self._delta_live_s.sum())
+
+    @property
+    def n_dead(self) -> int:
+        return int(self._main_rows_s.sum() - self._main_live_s.sum())
+
+    # ------------------------------------------------------------- build
+    def build(self, x: jax.Array,
+              ids: Optional[Sequence[int]] = None
+              ) -> "ShardedDynamicHybridIndex":
+        """Initial batch build; rows round-robin over shards."""
+        x = np.asarray(x)
+        n = x.shape[0]
+        if ids is None:
+            ids = np.arange(n, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            assert len(set(ids.tolist())) == len(ids), "duplicate ids"
+        self._d, self._dtype = int(x.shape[1]), x.dtype
+        S = self.shards
+        parts = [(x[s::S], ids[s::S]) for s in range(S)]
+        self._set_main(parts)
+        self._reset_delta()
+        self._next_id = int(ids.max()) + 1 if n else 0
+        return self
+
+    def _set_main(self, parts: List[Tuple[np.ndarray, np.ndarray]]) -> None:
+        """Per-shard (rows, ext_ids) -> padded sharded main segment."""
+        S = self.shards
+        ks = [int(p[0].shape[0]) for p in parts]
+        n_pad = _pad_size(max(max(ks), 1))
+        xs = np.zeros((S, n_pad, self._d), self._dtype)
+        ext = np.full((S, n_pad), -1, np.int32)
+        valid = np.zeros((S, n_pad), bool)
+        self._loc = {e: loc for e, loc in self._loc.items()
+                     if loc[1] == "d"}  # main locations are re-derived
+        for s, (rows, eids) in enumerate(parts):
+            k = ks[s]
+            xs[s, :k] = rows
+            ext[s, :k] = eids
+            valid[s, :k] = True
+            for i, e in enumerate(eids.tolist()):
+                self._loc[int(e)] = (s, "m", i)
+        self._n_pad = n_pad
+        self._main_rows_s = np.asarray(ks, np.int64)
+        self._main_live_s = np.asarray(ks, np.int64)
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
+        bids, perm, starts, regs = self._build_fn(n_pad)(
+            put(xs), put(valid), self.params)
+        live = np.concatenate([valid, np.zeros((S, 1), bool)], axis=1)
+        self._main = {
+            "x": put(xs), "ids": put(ext), "bucket_ids": bids,
+            "perm": perm, "starts": starts, "registers": regs,
+            "live": put(live),
+            "tomb_counts": put(np.zeros(
+                (S, self.family.L, self.num_buckets), np.int32))}
+
+    def _build_fn(self, n_pad: int):
+        """shard_map'd Algorithm 1 fusion over one padded row block."""
+        key = ("build", n_pad)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        family, B, m = self.family, self.num_buckets, self.m
+        axis = self.data_axis
+
+        def _build(x, valid, params):
+            x, valid = x[0], valid[0]
+            shard = jax.lax.axis_index(axis)
+            bids = family.bucket_ids(params, x, B).astype(jnp.int32)
+            # pad rows hash to bucket B: dropped by the CSR segment_sum
+            # and the HLL segment_max — invisible to every estimate.
+            bids = jnp.where(valid[:, None], bids, B)
+            gids = shard * n_pad + jnp.arange(n_pad, dtype=jnp.int32)
+            t = build_tables(gids, bids, B, m)
+            perm = t.perm - shard * n_pad
+            return (bids[None], perm[None], t.starts[None],
+                    t.registers[None])
+
+        sh = P(axis)
+        fn = jax.jit(shard_map(
+            _build, mesh=self.mesh, in_specs=(sh, sh, P()),
+            out_specs=(sh, sh, sh, sh), check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
+    def _reset_delta(self) -> None:
+        S, C, L = self.shards, self.delta_capacity, self.family.L
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
+        self._delta = {
+            "x": put(np.zeros((S, C + 1, self._d), self._dtype)),
+            "bucket_ids": put(np.full((S, C + 1, L), -1, np.int32)),
+            "ids": put(np.full((S, C + 1), -1, np.int32)),
+            "live": put(np.zeros((S, C + 1), bool)),
+            "count": put(np.zeros((S,), np.int32))}
+        self._delta_count_s[:] = 0
+        self._delta_live_s[:] = 0
+        self._loc = {e: loc for e, loc in self._loc.items()
+                     if loc[1] == "m"}
+
+    def _ensure_init(self, rows: np.ndarray) -> None:
+        """First contact without build(): empty main, delta-only shards."""
+        if self._delta is not None:
+            return
+        self._d, self._dtype = int(rows.shape[1]), rows.dtype
+        S, L, B, m = (self.shards, self.family.L, self.num_buckets, self.m)
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
+        self._n_pad = 0
+        self._main = {
+            "x": put(np.zeros((S, 0, self._d), self._dtype)),
+            "ids": put(np.zeros((S, 0), np.int32)),
+            "bucket_ids": put(np.zeros((S, 0, L), np.int32)),
+            "perm": put(np.zeros((S, L, 0), np.int32)),
+            "starts": put(np.zeros((S, L, B + 1), np.int32)),
+            "registers": put(np.zeros((S, L, B, m), np.uint8)),
+            "live": put(np.zeros((S, 1), bool)),
+            "tomb_counts": put(np.zeros((S, L, B), np.int32))}
+        self._reset_delta()
+
+    # ------------------------------------------------------------ insert
+    def insert(self, rows: jax.Array,
+               ids: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Append documents to the least-loaded shard deltas.
+
+        Splits the batch by remaining per-shard delta capacity,
+        compacting between chunks when every delta fills.
+        """
+        rows = np.asarray(rows)
+        if rows.shape[0] == 0:
+            return np.zeros((0,), np.int64)
+        self._ensure_init(rows)
+        if ids is None:
+            ids = np.arange(self._next_id, self._next_id + rows.shape[0],
+                            dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            if len(set(ids.tolist())) != len(ids):
+                raise KeyError("duplicate ids within insert batch")
+        for e in ids.tolist():
+            if e in self._loc:
+                raise KeyError(f"id {e} already indexed")
+        lo = 0
+        while lo < rows.shape[0]:
+            free = self.delta_capacity - self._delta_count_s
+            if free.sum() == 0:
+                self.compact(reason="delta_full")
+                free = self.delta_capacity - self._delta_count_s
+            take = int(min(free.sum(), rows.shape[0] - lo))
+            # round-robin water-fill over shards with free slots
+            order = np.argsort(self._delta_count_s, kind="stable")
+            assign: List[List[int]] = [[] for _ in range(self.shards)]
+            left, cursor = take, 0
+            free = free.copy()
+            while left:
+                s = int(order[cursor % self.shards])
+                cursor += 1
+                if free[s] > len(assign[s]):
+                    assign[s].append(lo + take - left)
+                    left -= 1
+            self._insert_chunk(rows, ids, assign)
+            lo += take
+        self._next_id = max(self._next_id, int(ids.max()) + 1)
+        self._maybe_compact()
+        return ids
+
+    def _insert_chunk(self, rows: np.ndarray, ids: np.ndarray,
+                      assign: List[List[int]]) -> None:
+        S = self.shards
+        pk = _pad_size(max(max(len(a) for a in assign), 1))
+        rows_p = np.zeros((S, pk, self._d), self._dtype)
+        ids_p = np.zeros((S, pk), np.int32)
+        valid = np.zeros((S, pk), bool)
+        for s, idxs in enumerate(assign):
+            k = len(idxs)
+            rows_p[s, :k] = rows[idxs]
+            ids_p[s, :k] = ids[idxs]
+            valid[s, :k] = True
+            base = int(self._delta_count_s[s])
+            for i, j in enumerate(idxs):
+                self._loc[int(ids[j])] = (s, "d", base + i)
+            self._delta_count_s[s] += k
+            self._delta_live_s[s] += k
+            self._inserts += k
+        d = self._delta
+        out = self._insert_fn(pk)(
+            (d["x"], d["bucket_ids"], d["ids"], d["live"], d["count"]),
+            self.params, rows_p, ids_p, valid)
+        self._delta = dict(zip(("x", "bucket_ids", "ids", "live", "count"),
+                               out))
+
+    def _insert_fn(self, pk: int):
+        key = ("insert", pk)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        family, B = self.family, self.num_buckets
+        axis = self.data_axis
+
+        def _ins(leaves, params, rows, ext, valid):
+            delta = delta_lib.DeltaSegment(*(l[0] for l in leaves))
+            bids = family.bucket_ids(params, rows[0], B)
+            nd = delta_lib.insert(delta, rows[0], bids, ext[0], valid[0])
+            return (nd.x[None], nd.bucket_ids[None], nd.ids[None],
+                    nd.live[None], nd.count[None])
+
+        sh = P(axis)
+        fn = jax.jit(shard_map(
+            _ins, mesh=self.mesh,
+            in_specs=((sh,) * 5, P(), sh, sh, sh),
+            out_specs=(sh,) * 5, check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------ delete
+    def delete(self, ids: Iterable[int], strict: bool = False) -> int:
+        """Tombstone documents by external id; returns #removed."""
+        S = self.shards
+        main_rows: List[List[int]] = [[] for _ in range(S)]
+        delta_slots: List[List[int]] = [[] for _ in range(S)]
+        for e in ids:
+            loc = self._loc.pop(int(e), None)
+            if loc is None:
+                if strict:
+                    raise KeyError(e)
+                continue
+            s, kind, pos = loc
+            (main_rows[s] if kind == "m" else delta_slots[s]).append(pos)
+        removed = 0
+        if any(main_rows):
+            pk = _pad_size(max(max(len(a) for a in main_rows), 1))
+            rows_p = np.zeros((S, pk), np.int32)
+            valid = np.zeros((S, pk), bool)
+            for s, rr in enumerate(main_rows):
+                rows_p[s, :len(rr)] = rr
+                valid[s, :len(rr)] = True
+                self._main_live_s[s] -= len(rr)
+                removed += len(rr)
+            live, counts = self._delete_main_fn(pk)(
+                (self._main["live"], self._main["tomb_counts"],
+                 self._main["bucket_ids"]), rows_p, valid)
+            self._main = {**self._main, "live": live, "tomb_counts": counts}
+        if any(delta_slots):
+            pk = _pad_size(max(max(len(a) for a in delta_slots), 1))
+            slots_p = np.zeros((S, pk), np.int32)
+            valid = np.zeros((S, pk), bool)
+            for s, ss in enumerate(delta_slots):
+                slots_p[s, :len(ss)] = ss
+                valid[s, :len(ss)] = True
+                self._delta_live_s[s] -= len(ss)
+                removed += len(ss)
+            dlive = self._delete_delta_fn(pk)(
+                (self._delta["x"], self._delta["bucket_ids"],
+                 self._delta["ids"], self._delta["live"],
+                 self._delta["count"]), slots_p, valid)
+            self._delta = {**self._delta, "live": dlive}
+        self._deletes += removed
+        self._maybe_compact()
+        return removed
+
+    def _delete_main_fn(self, pk: int):
+        key = ("del_main", pk)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        axis = self.data_axis
+
+        def _del(leaves, rows, valid):
+            live, counts, bids = (l[0] for l in leaves)
+            ts = tomb_lib.Tombstones(live=live, counts=counts)
+            row_buckets = bids[rows[0]]   # pad lanes: row 0, add-count 0
+            nts = tomb_lib.mark_dead(ts, rows[0], row_buckets, valid[0])
+            return nts.live[None], nts.counts[None]
+
+        sh = P(axis)
+        fn = jax.jit(shard_map(_del, mesh=self.mesh,
+                               in_specs=((sh,) * 3, sh, sh),
+                               out_specs=(sh, sh), check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
+    def _delete_delta_fn(self, pk: int):
+        key = ("del_delta", pk)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        axis = self.data_axis
+
+        def _del(leaves, slots, valid):
+            delta = delta_lib.DeltaSegment(*(l[0] for l in leaves))
+            return delta_lib.kill(delta, slots[0], valid[0]).live[None]
+
+        sh = P(axis)
+        fn = jax.jit(shard_map(_del, mesh=self.mesh,
+                               in_specs=((sh,) * 5, sh, sh),
+                               out_specs=sh, check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
+    # --------------------------------------------------------- compaction
+    def _maybe_compact(self) -> None:
+        reason = self.policy.reason(
+            delta_count=int(self._delta_count_s.max()) if self._delta is not
+            None else 0,
+            delta_capacity=self.delta_capacity,
+            n_main=int(self._main_rows_s.sum()),
+            n_dead=self.n_dead)
+        if reason:
+            self.compact(reason=reason)
+
+    def compact(self, reason: str = "manual") -> None:
+        """Fold each shard's delta + drop its tombstones, in place.
+
+        Per-shard: live rows stay on their shard and go through the
+        ``build_tables`` fusion again — no cross-shard movement.
+        """
+        t0 = time.perf_counter()
+        if self._delta is None:
+            return
+        dropped = self.n_dead + int(
+            (self._delta_count_s - self._delta_live_s).sum())
+        m, d = self._main, self._delta
+        mx = np.asarray(m["x"])
+        mids = np.asarray(m["ids"])
+        mlive = np.asarray(m["live"])[:, :self._n_pad]
+        dx = np.asarray(d["x"])[:, :self.delta_capacity]
+        dids = np.asarray(d["ids"])[:, :self.delta_capacity]
+        dlive = np.asarray(d["live"])[:, :self.delta_capacity]
+        parts = []
+        for s in range(self.shards):
+            xs = np.concatenate([mx[s][mlive[s]], dx[s][dlive[s]]], axis=0)
+            es = np.concatenate([mids[s][mlive[s]].astype(np.int64),
+                                 dids[s][dlive[s]].astype(np.int64)])
+            parts.append((xs, es))
+        self._set_main(parts)
+        self._reset_delta()
+        self.stats.record(reason, t0, dropped)
+
+    # ------------------------------------------------------------- query
+    def query(self, queries: jax.Array, r: float,
+              force: Optional[str] = None) -> ShardedQueryResult:
+        """Hybrid r-NN reporting, union over shards; ids are external."""
+        assert self._delta is not None, "index is empty: build/insert first"
+        queries = jnp.asarray(queries)
+        m, d = self._main, self._delta
+        out = self._query_fn(self._n_pad, force)(
+            (m["x"], m["ids"], m["perm"], m["starts"], m["registers"],
+             m["live"], m["tomb_counts"]),
+            (d["x"], d["bucket_ids"], d["ids"], d["live"], d["count"]),
+            self.params, queries, jnp.float32(r))
+        ids, dists, mask, coll, cand, used = (np.asarray(o) for o in out)
+        return ShardedQueryResult(ids=ids, dists=dists, mask=mask,
+                                  collisions=coll, cand_est=cand,
+                                  used_lsh=used,
+                                  n_queries=int(queries.shape[0]))
+
+    def _query_fn(self, n_pad: int, force: Optional[str]):
+        key = ("query", n_pad, force)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        family, cm, B = self.family, self.cost_model, self.num_buckets
+        metric = family.metric
+        cap, C = self.cap, self.delta_capacity
+        # both cond branches must agree on the output width, and top_k
+        # cannot widen a buffer: clamp by the narrower strategy's width
+        max_out = min(self.max_out, n_pad + C + 1,
+                      family.L * cap + C + 1)
+        routing, axis = self.routing, self.data_axis
+        engine = self._engine
+
+        def _query(main_leaves, delta_leaves, params, queries, r):
+            (mx, mids, perm, starts, regs, live, tcounts) = (
+                l[0] for l in main_leaves)
+            delta = delta_lib.DeltaSegment(*(l[0] for l in delta_leaves))
+            qb = family.bucket_ids(params, queries, B)
+
+            dview = delta_lib.DeltaView(delta, metric)
+            d_est = dview.estimate_terms(qb)
+            n_live_local = jnp.sum(delta.live, dtype=jnp.int32)
+            n_scan_local = delta.count + n_pad
+            segments, local_terms = [dview], [d_est]
+            coll_local = d_est.collisions
+            if n_pad > 0:
+                tables = LSHTables(perm, starts, regs)
+                main = TableSegment(
+                    tables=tables, x=mx, metric=metric, cap=cap,
+                    live=live, tomb_counts=tcounts, ext_ids=mids,
+                    q_chunk=queries.shape[0])
+                m_est = main.estimate_terms(qb)
+                merged_local = hll_lib.merge_registers(
+                    m_est.registers.astype(jnp.int32), axis=1)   # (Q, m)
+                local_terms = [dataclasses.replace(
+                    m_est, registers=None,
+                    merged_registers=merged_local), d_est]
+                segments = [main, dview]
+                coll_local = coll_local + m_est.collisions
+                n_live_local = n_live_local + jnp.sum(live,
+                                                      dtype=jnp.int32)
+
+            # cross-shard SegmentEstimate merge: psum exact terms, pmax
+            # the HLL registers (distinct union across disjoint shards).
+            merged = SegmentEstimate(
+                collisions=jax.lax.psum(coll_local, axis),
+                dead_collisions=(jax.lax.psum(m_est.dead_collisions, axis)
+                                 if n_pad > 0 else None),
+                merged_registers=(jax.lax.pmax(merged_local, axis)
+                                  if n_pad > 0 else None),
+                cand_exact=jax.lax.psum(
+                    d_est.cand_exact.astype(jnp.float32), axis))
+            n_live_g = jax.lax.psum(n_live_local, axis)
+            n_scan_g = jax.lax.psum(n_scan_local, axis)
+            route_g = finalize_route([merged], cm, n_live=n_live_g,
+                                     n_scan=n_scan_g)
+            route_l = finalize_route(local_terms, cm, n_live=n_live_local,
+                                     n_scan=n_scan_local)
+
+            route = route_g if routing == "global" else route_l
+            use_lsh = (jnp.sum(route.lsh_cost)
+                       < route.linear_cost * queries.shape[0])
+            if force == "lsh":
+                use_lsh = jnp.bool_(True)
+            elif force == "linear":
+                use_lsh = jnp.bool_(False)
+
+            def branch(lsh_route):
+                def fn(_):
+                    ids, dists, mask = engine.search_group(
+                        segments, qb, queries, r, lsh_route=lsh_route)
+                    return compact_results(ids, dists, mask, max_out)
+                return fn
+
+            ids, dists, mask = jax.lax.cond(use_lsh, branch(True),
+                                            branch(False), operand=None)
+            return (ids[None], dists[None], mask[None], route_g.collisions,
+                    route_g.cand_est, use_lsh[None])
+
+        sh, rep = P(axis), P()
+        fn = jax.jit(shard_map(
+            _query, mesh=self.mesh,
+            in_specs=((sh,) * 7, (sh,) * 5, rep, rep, rep),
+            out_specs=(sh, sh, sh, rep, rep, sh), check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------ observability
+    def index_stats(self) -> Dict[str, object]:
+        out = {
+            "n_live": self.n,
+            "n_main": int(self._main_rows_s.sum()),
+            "n_main_dead": self.n_dead,
+            "delta_count": int(self._delta_count_s.sum()),
+            "delta_live": int(self._delta_live_s.sum()),
+            "delta_capacity": self.delta_capacity,
+            "shards": self.shards,
+            "n_pad_per_shard": self._n_pad,
+            "live_per_shard": self._main_live_s.tolist(),
+            "delta_per_shard": self._delta_count_s.tolist(),
+            "routing": self.routing,
+            "inserts": self._inserts,
+            "deletes": self._deletes,
+        }
+        out.update(self.stats.as_dict())
+        return out
+
+    # -------------------------------------------------------- checkpoint
+    def state_dict(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Sharded segment leaves as a flat-array pytree.
+
+        Leaves keep their leading shard axis; restore re-places them on
+        the current mesh (same shard count) with ``device_put``.  The
+        tree structure is state-independent so a fresh index serves as
+        the restore template.
+        """
+        S, L, B, m = (self.shards, self.family.L, self.num_buckets, self.m)
+        if self._delta is not None:
+            main = {k: np.asarray(v) for k, v in self._main.items()}
+            delta = {k: np.asarray(v) for k, v in self._delta.items()}
+        else:
+            main = {"x": np.zeros((S, 0, 0), np.float32),
+                    "ids": np.zeros((S, 0), np.int32),
+                    "bucket_ids": np.zeros((S, 0, L), np.int32),
+                    "perm": np.zeros((S, L, 0), np.int32),
+                    "starts": np.zeros((S, L, B + 1), np.int32),
+                    "registers": np.zeros((S, L, B, m), np.uint8),
+                    "live": np.zeros((S, 1), bool),
+                    "tomb_counts": np.zeros((S, L, B), np.int32)}
+            C = self.delta_capacity
+            delta = {"x": np.zeros((S, C + 1, 0), np.float32),
+                     "bucket_ids": np.full((S, C + 1, L), -1, np.int32),
+                     "ids": np.full((S, C + 1), -1, np.int32),
+                     "live": np.zeros((S, C + 1), bool),
+                     "count": np.zeros((S,), np.int32)}
+        return {
+            "params": self.params,
+            "main": main,
+            "delta": delta,
+            "meta": {"next_id": np.int64(self._next_id),
+                     "built": np.int64(0 if self._delta is None else 1)},
+        }
+
+    def load_state_dict(self, state) -> "ShardedDynamicHybridIndex":
+        """Restore sharded segment state saved by ``state_dict``."""
+        self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
+        # cached query fns bake in delta_capacity (the max_out clamp):
+        # a restore may change it, so the cache cannot survive
+        self._fn_cache = {}
+        self._next_id = int(np.asarray(state["meta"]["next_id"]))
+        if int(np.asarray(state["meta"]["built"])) == 0:
+            self._main = self._delta = None
+            return self
+        ms, ds = state["main"], state["delta"]
+        S = np.asarray(ms["live"]).shape[0]
+        assert S == self.shards, (S, self.shards)
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
+        self._main = {k: put(v) for k, v in ms.items()}
+        self._delta = {k: put(v) for k, v in ds.items()}
+        self._n_pad = int(np.asarray(ms["x"]).shape[1])
+        self._d = int(np.asarray(ms["x"]).shape[2])
+        self._dtype = np.asarray(ms["x"]).dtype
+        self.delta_capacity = int(np.asarray(ds["live"]).shape[1]) - 1
+        # host bookkeeping from segment state
+        self._loc = {}
+        mids = np.asarray(ms["ids"])
+        mlive = np.asarray(ms["live"])[:, :self._n_pad]
+        real = mids != -1
+        self._main_rows_s = real.sum(axis=1).astype(np.int64)
+        self._main_live_s = mlive.sum(axis=1).astype(np.int64)
+        self._delta_count_s = np.asarray(ds["count"]).astype(np.int64)
+        dlive = np.asarray(ds["live"])[:, :self.delta_capacity]
+        self._delta_live_s = dlive.sum(axis=1).astype(np.int64)
+        dids = np.asarray(ds["ids"])
+        for s in range(self.shards):
+            for i in np.nonzero(mlive[s])[0]:
+                self._loc[int(mids[s, i])] = (s, "m", int(i))
+            for i in range(int(self._delta_count_s[s])):
+                if dlive[s, i]:
+                    self._loc[int(dids[s, i])] = (s, "d", int(i))
+        return self

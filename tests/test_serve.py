@@ -99,6 +99,66 @@ def test_retrieval_service_live_mutation():
     assert "compactions" in svc.stats
 
 
+def test_retrieval_service_exact_linear_stats():
+    """stats accumulate the exact per-query linear count from the route
+    partition, not the rounded frac_linear reconstruction."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64))
+    b = lm_batch(3, 0, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+    b.pop("labels")
+    svc.index_corpus([b])
+    qb = lm_batch(4, 0, batch=16, seq=12, vocab=cfg.vocab, cfg=cfg)
+    qb.pop("labels")
+    total = 0
+    for _ in range(3):
+        res, _ = svc.query(qb)
+        exact = len(set(np.asarray(res.lin_idx).tolist()))
+        assert res.n_linear == exact          # pow2 padding deduped
+        total += exact
+    assert svc.stats["linear_served"] == total
+    assert svc.stats["queries"] == 48
+
+
+def test_retrieval_service_mesh_sharded():
+    """RetrievalConfig.mesh routes the corpus into the sharded dynamic
+    index; add/remove/query flow works through shard_map."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1,), ("data",))     # 1-device mesh: same code path
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64, delta_capacity=128,
+                                           mesh=mesh,
+                                           shard_routing="per_shard"))
+    corpus = []
+    for i in range(2):
+        b = lm_batch(3, i, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        corpus.append(b)
+    assert svc.index_corpus(corpus[:1]) == 32
+    assert svc.stats["shards"] == 1
+
+    extra = corpus[1]
+    new_ids = svc.add_documents([extra])
+    assert len(new_ids) == 32 and svc.index.n == 64
+    res, _ = svc.query(extra)
+    found = sum(1 for i in range(32)
+                if set(res.neighbors(i).tolist()) & set(new_ids.tolist()))
+    assert found >= 28
+    assert svc.remove_documents(new_ids.tolist()) == 32
+    assert svc.index.n == 32
+    res2, _ = svc.query(extra)
+    reported = set().union(*(set(res2.neighbors(i).tolist())
+                             for i in range(32)))
+    assert reported.isdisjoint(set(new_ids.tolist()))
+    assert "total_seconds" in svc.stats
+
+
 def test_scheduler_pow2_bucketing():
     sched = ShapeBucketScheduler(max_batch=16, min_bucket=4)
     for i in range(21):

@@ -1,0 +1,133 @@
+"""Sharded dynamic index (subprocess with 2 host platform devices):
+
+  * churn equivalence — after mixed insert/delete/compact churn,
+    ``ShardedDynamicHybridIndex`` reports exactly the neighbor sets of
+    a fresh single-host ``DynamicHybridIndex.build()`` on the surviving
+    corpus, per forced route, for BOTH routing policies; un-forced
+    hybrid reports sandwich between the LSH and linear truths;
+  * checkpoint round-trip of the sharded segment leaves.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    return out.stdout
+
+
+_COMMON = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import (CompactionPolicy, DynamicHybridIndex,
+                             ShardedDynamicHybridIndex)
+
+assert len(jax.devices()) == 2
+D, L, B, M, CAP, R = 8, 4, 256, 32, 2048, 1.2
+NO_AUTO = CompactionPolicy(delta_fill=2.0, tombstone_ratio=2.0)
+mesh = jax.make_mesh((2,), ("data",))
+fam = make_family("l2", d=D, L=L, r=1.0)
+x = np.asarray(clustered_dataset(900, D, n_clusters=12,
+                                 dense_core_frac=0.2, core_scale=0.05,
+                                 seed=0, metric="l2"), np.float32)
+q = x[::60][:12]
+
+def churn(idx):
+    # build + insert + delete + compact + more inserts/deletes: the
+    # final index holds main (compacted, padded) AND delta rows AND
+    # fresh tombstones in both segment kinds.
+    idx.build(x[:600])
+    idx.insert(x[600:800])
+    idx.delete(range(50, 150))
+    idx.compact()
+    idx.insert(x[800:])
+    dead2 = list(range(200, 260)) + list(range(820, 860))
+    assert idx.delete(dead2) == 100
+    assert idx.delete([50, 10**6]) == 0      # double/unknown: no-ops
+    return idx
+
+live = np.ones(900, bool)
+live[50:150] = False
+live[200:260] = False
+live[820:860] = False
+live_ids = np.nonzero(live)[0]
+fresh = DynamicHybridIndex(fam, num_buckets=B, m=M, cap=CAP, key=0,
+                           delta_capacity=512, policy=NO_AUTO)
+fresh.build(x[live], ids=live_ids)
+want = {f: fresh.query(q, R, force=f).neighbor_sets()
+        for f in ("lsh", "linear")}
+"""
+
+
+def test_churn_equivalence_both_policies():
+    out = _run(_COMMON + r"""
+for policy in ("global", "per_shard"):
+    sh = ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                                   cap=CAP, delta_capacity=256,
+                                   policy=NO_AUTO, routing=policy,
+                                   max_out=900, key=0)
+    churn(sh)
+    assert sh.n == fresh.n == int(live.sum())
+    st = sh.index_stats()
+    assert st["compactions"] == 1 and st["delta_count"] > 0
+    for force in ("lsh", "linear"):
+        got = sh.query(q, R, force=force).neighbor_sets()
+        assert got == want[force], (policy, force)
+    # un-forced hybrid: per-shard strategy mixing stays sandwiched
+    # between the two single-host truths (LSH subset <= linear truth)
+    res = sh.query(q, R)
+    got = res.neighbor_sets()
+    for i in got:
+        assert want["lsh"][i] <= got[i] <= want["linear"][i], (policy, i)
+    print("POLICY_OK", policy, np.asarray(res.used_lsh).tolist())
+print("ALL_OK")
+""")
+    assert "ALL_OK" in out
+    assert out.count("POLICY_OK") == 2
+
+
+def test_sharded_checkpoint_roundtrip(tmp_path):
+    out = _run(_COMMON + rf"""
+import tempfile
+from repro.checkpoint import CheckpointManager
+
+sh = ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M, cap=CAP,
+                               delta_capacity=256, policy=NO_AUTO,
+                               routing="per_shard", max_out=900, key=0)
+churn(sh)
+mgr = CheckpointManager({str(tmp_path)!r})
+mgr.save_index(3, sh)
+
+restored = ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                                     cap=CAP, delta_capacity=256,
+                                     policy=NO_AUTO, routing="per_shard",
+                                     max_out=900, key=0)
+assert mgr.restore_index(restored) == 3
+for f in ("lsh", "linear"):
+    assert (restored.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+a, b = sh.index_stats(), restored.index_stats()
+for key in ("n_live", "n_main", "n_main_dead", "delta_count",
+            "delta_live", "live_per_shard", "delta_per_shard"):
+    assert a[key] == b[key], key
+# the restored index keeps streaming: ids continue past the old max
+new = restored.insert(x[:4])
+assert new.min() >= 900
+assert restored.n == sh.n + 4
+assert restored.delete(new.tolist()) == 4
+print("CKPT_OK")
+""")
+    assert "CKPT_OK" in out

@@ -97,8 +97,13 @@ def test_compaction_preserves_neighbor_sets():
     st = dyn.index_stats()
     assert st["compactions"] == 1 and st["delta_count"] == 0
     assert st["n_main"] == dyn.n == 900 - 60
+    assert st["total_seconds"] == st["last_seconds"] > 0
     for f in ("lsh", "linear"):
         assert dyn.query(q, R, force=f).neighbor_sets() == before[f], f
+    dyn.compact()   # cumulative: total keeps growing, last resets
+    st2 = dyn.index_stats()
+    assert st2["total_seconds"] > st2["last_seconds"] > 0
+    assert st2["total_seconds"] > st["total_seconds"]
 
 
 def test_auto_compaction_triggers():
