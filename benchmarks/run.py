@@ -24,8 +24,9 @@ def main() -> None:
                     help="run a streaming benchmark and write its JSON; "
                          "--emit BENCH_streaming.json runs the single-host "
                          "bench, --emit BENCH_sharded.json the mesh-sharded "
-                         "one (>= 2 host devices forced). Skips the paper "
-                         "tables")
+                         "one (>= 2 host devices forced), --emit "
+                         "BENCH_lsm.json the LSM compaction-stall bench. "
+                         "Skips the paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
@@ -48,6 +49,27 @@ def main() -> None:
               f"{rows['query_batch_s_per_shard'] / max(rows['query_batch_s_global'], 1e-12):.2f}x global "
               f"(after compact: "
               f"{rows['query_batch_s_after_compact'] / max(rows['query_batch_s_global'], 1e-12):.2f}x)")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "lsm" in os.path.basename(args.emit):
+        from benchmarks import lsm_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = lsm_bench.main(scale, emit=args.emit)
+        print(f"lsm_round_p99_budgeted,"
+              f"{1e6 * rows['budgeted_round_p99_s']:.1f},"
+              f"max {1e3 * rows['budgeted_round_max_s']:.1f}ms over "
+              f"{rows['n_churn']} churned docs")
+        print(f"lsm_stall_cut_vs_monolithic,{0:.1f},"
+              f"{rows['stall_cut_vs_monolithic']:.1f}x lower worst-case "
+              f"query-batch stall (vs sync tiered: "
+              f"{rows['stall_cut_vs_sync']:.1f}x)")
+        print(f"lsm_insert_throughput,"
+              f"{1e6 / max(rows['insert_docs_per_s'], 1e-9):.1f},"
+              f"{rows['insert_docs_per_s']:.0f} docs/s; merges/level "
+              f"{rows['budgeted_merges_per_level']}")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

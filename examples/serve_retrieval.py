@@ -24,7 +24,9 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
     svc = RetrievalService(cfg, par, params,
                            RetrievalConfig(radius=0.35, tables=12,
-                                           num_buckets=1024, hll_m=64))
+                                           num_buckets=1024, hll_m=64,
+                                           delta_capacity=512,
+                                           compact_step_rows=256))
 
     # Index a synthetic corpus of 2048 "documents".
     corpus = []
@@ -36,8 +38,10 @@ def main():
     print(f"indexed {n} documents "
           f"(L={svc.index.family.L}, k={svc.index.family.k})")
 
-    # Batched requests through the scheduler.
-    sched = ShapeBucketScheduler(max_batch=32)
+    # Batched requests through the scheduler; LSM merge work (freezes
+    # from live inserts) advances between batches via the tick hook.
+    sched = ShapeBucketScheduler(max_batch=32,
+                                 background_tick=svc.compaction_tick)
     for i in range(50):
         sched.submit(i)
     while sched.queue:

@@ -136,11 +136,11 @@ class CheckpointManager:
 
         ``index`` is any object with a ``state_dict()`` returning an
         array pytree (``DynamicHybridIndex`` or the mesh-sharded
-        ``ShardedDynamicHybridIndex``); main/delta/tombstone buffers
-        land as one leaf file each under the usual atomic COMMITTED
-        protocol.  Sharded segment leaves are gathered to full host
-        arrays (leading shard axis kept), so the on-disk format is
-        mesh-agnostic.
+        ``ShardedDynamicHybridIndex``); every level of the segment
+        stack, the delta, and the tombstone buffers land as one leaf
+        file each under the usual atomic COMMITTED protocol.  Sharded
+        segment leaves are gathered to full host arrays (leading shard
+        axis kept), so the on-disk format is mesh-agnostic.
         """
         self.save(step, index.state_dict(), blocking=blocking)
 
@@ -149,12 +149,52 @@ class CheckpointManager:
         same family/config — and, for the sharded index, the same shard
         count — as the one that saved; ``load_state_dict`` re-places
         sharded leaves on the index's current mesh).  Returns the step,
-        or None when no committed checkpoint exists."""
-        state, step = self.restore(index.state_dict(), step=step)
+        or None when no committed checkpoint exists.
+
+        The restore is manifest-driven (``restore_tree``), not
+        template-driven: a streaming index's level stack is a variable
+        number of frozen segments, so the saved structure — however many
+        levels, mid-merge or not — is reconstructed from leaf paths
+        rather than matched against the fresh index's (usually empty)
+        state."""
+        state, step = self.restore_tree(step=step)
         if state is None:
             return None
         index.load_state_dict(state)
         return step
+
+    def restore_tree(self, step: Optional[int] = None):
+        """Load a committed step as nested dicts rebuilt from leaf paths.
+
+        No template needed: ``a/b/c`` becomes ``{"a": {"b": {"c": arr}}}``
+        with host numpy leaves.  This is how variable-structure states
+        (the streaming indexes' level lists) round-trip.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        state: Dict[str, Any] = {}
+        for path, arr in self._load_leaves(step):
+            node = state
+            parts = path.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return state, step
+
+    def _load_leaves(self, step: int):
+        """Yield (leaf path, host array) pairs of a committed step —
+        the one place that knows the on-disk leaf format."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        for path, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            yield path, arr
 
     def restore(self, template, step: Optional[int] = None,
                 target_shardings=None):
@@ -168,16 +208,7 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             return None, None
-        d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
-        flat = {}
-        for path, meta in manifest["leaves"].items():
-            arr = np.load(os.path.join(d, meta["file"]))
-            if meta["dtype"] == "bfloat16":
-                import ml_dtypes
-                arr = arr.view(ml_dtypes.bfloat16)
-            flat[path] = arr
+        flat = dict(self._load_leaves(step))
         state = _unflatten(flat, template)
         if target_shardings is not None:
             state = jax.tree_util.tree_map(

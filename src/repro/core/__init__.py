@@ -11,10 +11,10 @@ Public surface:
   * ``core.multiprobe`` — query-directed multi-probe extension
 """
 from repro.core.cost_model import CostModel, PAPER_PRESETS, calibrate
-from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
+from repro.core.engine import (QueryEngine, RouteEstimate, SegmentEstimate,
+                               TableSegment, estimate_routes,
                                finalize_route)
 from repro.core.index import HybridLSHIndex, QueryResult
-from repro.core.router import RouteEstimate, estimate_routes
 
 __all__ = ["CostModel", "PAPER_PRESETS", "calibrate", "HybridLSHIndex",
            "QueryResult", "RouteEstimate", "estimate_routes",

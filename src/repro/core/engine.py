@@ -15,7 +15,13 @@ streaming ``streaming.sharded``) is a composition over two concepts:
 
 The old static/dynamic estimator split collapses here: a static segment
 is simply one whose dead counts are zero and whose scan size equals its
-live size, so ``finalize_route`` serves both.  The distributed indexes
+live size, so ``finalize_route`` serves both.  The segment list is
+arbitrary-length: the streaming index hands over its whole LSM level
+stack (every frozen level + the delta) and the per-segment dead-count
+correction composes term-by-term — Algorithm 2 stays a single path no
+matter how many levels exist.  Multi-probe composes the same way: a
+``tidx`` column→table map turns (Q, L*T) probed buckets into virtual
+tables that every segment adapter understands.  The distributed indexes
 reuse the traceable pieces (``Segment.estimate_terms`` +
 ``finalize_route`` + ``Segment.search``) inside ``shard_map``, merging
 ``SegmentEstimate`` fields across shards with ``psum``/``pmax`` before
@@ -35,7 +41,7 @@ from repro.core import hll as hll_lib
 from repro.core import search as search_lib
 from repro.core.cost_model import CostModel
 from repro.core.lsh.tables import (LSHTables, bucket_counts,
-                                   gather_registers)
+                                   gather_registers, table_index)
 from repro.kernels import ops
 
 __all__ = ["RouteEstimate", "SegmentEstimate", "Segment", "TableSegment",
@@ -175,15 +181,16 @@ class TableSegment:
     n_scan: Optional[Scalar] = None          # defaults to #rows scanned
     impl: Optional[str] = None
     q_chunk: Optional[int] = None            # None -> min(32, Q)
+    tidx: Optional[jax.Array] = None         # (V,) multi-probe column->table
 
     def estimate_terms(self, qbuckets: jax.Array) -> SegmentEstimate:
-        counts = bucket_counts(self.tables, qbuckets)       # (Q, L)
-        regs = gather_registers(self.tables, qbuckets)      # (Q, L, m)
+        counts = bucket_counts(self.tables, qbuckets, tidx=self.tidx)
+        regs = gather_registers(self.tables, qbuckets, tidx=self.tidx)
         if self.tomb_counts is None:
             collisions = jnp.sum(counts, axis=-1)
             dead = None
         else:
-            lidx = jnp.arange(self.tables.L)[None, :]
+            lidx = table_index(self.tables, self.tidx)
             d = self.tomb_counts[lidx, qbuckets.astype(jnp.int32)]
             collisions = jnp.sum(counts - d, axis=-1)
             dead = jnp.sum(d, axis=-1)
@@ -201,7 +208,7 @@ class TableSegment:
             qc = self.q_chunk or min(32, q.shape[0])
             ids, dists, mask = search_lib.lsh_search(
                 self.x, self.tables, qbuckets, q, r, self.metric, self.cap,
-                q_chunk=qc)
+                q_chunk=qc, tidx=self.tidx)
         else:
             ids, dists, mask = search_lib.linear_search(
                 self.x, q, r, self.metric, impl=self.impl)

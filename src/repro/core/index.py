@@ -13,7 +13,6 @@ in ``serve.retrieval``.  All of them compose the same engine.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax
@@ -22,6 +21,7 @@ import jax.numpy as jnp
 from repro.core.cost_model import CostModel
 from repro.core.engine import (QueryEngine, QueryResult, RouteEstimate,
                                TableSegment)
+from repro.core.lsh.families import bucket_fn_for
 from repro.core.lsh.tables import LSHTables, build_tables
 
 __all__ = ["HybridLSHIndex", "QueryResult"]
@@ -47,8 +47,7 @@ class HybridLSHIndex:
         self.x: Optional[jax.Array] = None
         self.tables: Optional[LSHTables] = None
         self._engine = QueryEngine(cost_model, impl=impl)
-        self._bucket_fn = jax.jit(functools.partial(
-            self.family.bucket_ids, num_buckets=self.num_buckets))
+        self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
 
     # ------------------------------------------------------------------
     @property

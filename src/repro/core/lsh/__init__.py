@@ -1,8 +1,9 @@
 from repro.core.lsh.families import (BitSampling, PStableL1, PStableL2,
-                                     SimHash, k_from_delta, make_family)
+                                     SimHash, bucket_fn_for, k_from_delta,
+                                     make_family)
 from repro.core.lsh.tables import (LSHTables, bucket_counts, build_tables,
                                    gather_candidates, gather_registers)
 
 __all__ = ["BitSampling", "PStableL1", "PStableL2", "SimHash",
-           "k_from_delta", "make_family", "LSHTables", "bucket_counts",
+           "bucket_fn_for", "k_from_delta", "make_family", "LSHTables", "bucket_counts",
            "build_tables", "gather_candidates", "gather_registers"]

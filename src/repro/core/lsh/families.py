@@ -20,6 +20,7 @@ fixes (k, w) = (8, 4r) for L1 and (7, 2r) for L2 to reach delta = 10%.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Any, Dict
 
@@ -28,6 +29,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hll import hash32
+
+
+@functools.lru_cache(maxsize=128)
+def bucket_fn_for(family, num_buckets: int):
+    """Shared jitted ``(params, x) -> bucket ids`` per (family, B).
+
+    Families are frozen dataclasses (hashable), so the compiled hash
+    survives index reconstruction — restores, benchmark reruns, and
+    serving restarts reuse it instead of re-tracing per instance.
+    """
+    return jax.jit(functools.partial(family.bucket_ids,
+                                     num_buckets=num_buckets))
 
 __all__ = [
     "SimHash", "PStableL2", "PStableL1", "BitSampling",

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import hll as hll_lib
 
-__all__ = ["LSHTables", "build_tables", "bucket_counts", "gather_registers",
-           "gather_candidates"]
+__all__ = ["LSHTables", "build_tables", "table_index", "bucket_counts",
+           "gather_registers", "gather_candidates"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -81,43 +81,59 @@ def build_tables(ids: jax.Array, bucket_ids: jax.Array, num_buckets: int,
     return LSHTables(out["perm"], out["starts"], out["registers"])
 
 
-def bucket_counts(tables: LSHTables, qbuckets: jax.Array) -> jax.Array:
-    """qbuckets: (Q, L) -> per-(query, table) bucket sizes (Q, L) int32.
+def table_index(tables: LSHTables,
+                tidx: jax.Array | None) -> jax.Array:
+    """Virtual-table map, shaped (1, V): column j of a qbuckets array
+    probes physical table ``tidx[j]`` (identity when tidx is None).
+    Multi-probe flattens its (Q, L, T) probe set to (Q, L*T) columns
+    with ``tidx`` repeating each table T times — every gather below
+    (and the engine's tombstone lookup) then works unchanged."""
+    if tidx is None:
+        return jnp.arange(tables.L, dtype=jnp.int32)[None, :]
+    return tidx.astype(jnp.int32)[None, :]
 
+
+def bucket_counts(tables: LSHTables, qbuckets: jax.Array,
+                  tidx: jax.Array | None = None) -> jax.Array:
+    """qbuckets: (Q, V) -> per-(query, probed bucket) sizes (Q, V) int32.
+
+    V = L (one probe per table) or L*T under multi-probe (``tidx``).
     ``sum(axis=-1)`` of the result is the exact #collisions of Eq. (1).
     """
-    b = qbuckets.astype(jnp.int32)                      # (Q, L)
-    lidx = jnp.arange(tables.L)[None, :]                # (1, L)
+    b = qbuckets.astype(jnp.int32)                      # (Q, V)
+    lidx = table_index(tables, tidx)                    # (1, V)
     lo = tables.starts[lidx, b]
     hi = tables.starts[lidx, b + 1]
     return hi - lo
 
 
-def gather_registers(tables: LSHTables, qbuckets: jax.Array) -> jax.Array:
-    """(Q, L) bucket ids -> (Q, L, m) HLL registers of the hit buckets."""
-    lidx = jnp.arange(tables.L)[None, :]
+def gather_registers(tables: LSHTables, qbuckets: jax.Array,
+                     tidx: jax.Array | None = None) -> jax.Array:
+    """(Q, V) bucket ids -> (Q, V, m) HLL registers of the hit buckets."""
+    lidx = table_index(tables, tidx)
     return tables.registers[lidx, qbuckets.astype(jnp.int32)]
 
 
 def gather_candidates(tables: LSHTables, qbuckets: jax.Array, cap: int,
-                      sentinel: int) -> jax.Array:
-    """Fixed-capacity candidate gather: (Q, L) buckets -> (Q, L*cap) ids.
+                      sentinel: int,
+                      tidx: jax.Array | None = None) -> jax.Array:
+    """Fixed-capacity candidate gather: (Q, V) buckets -> (Q, V*cap) ids.
 
-    Each table contributes up to ``cap`` ids from the query's bucket;
-    slots beyond the bucket size are filled with ``sentinel`` (an id ==
-    n, sorting after every real id).  Truncation beyond ``cap`` is a
-    recall risk only for buckets the cost model routes to linear search
-    anyway (big buckets => big #collisions => LSHCost > LinearCost).
+    Each probed bucket contributes up to ``cap`` ids; slots beyond the
+    bucket size are filled with ``sentinel`` (an id == n, sorting after
+    every real id).  Truncation beyond ``cap`` is a recall risk only for
+    buckets the cost model routes to linear search anyway (big buckets
+    => big #collisions => LSHCost > LinearCost).
     """
-    b = qbuckets.astype(jnp.int32)                      # (Q, L)
-    lidx = jnp.arange(tables.L)[None, :]
-    lo = tables.starts[lidx, b]                          # (Q, L)
-    size = tables.starts[lidx, b + 1] - lo               # (Q, L)
+    b = qbuckets.astype(jnp.int32)                      # (Q, V)
+    lidx = table_index(tables, tidx)
+    lo = tables.starts[lidx, b]                          # (Q, V)
+    size = tables.starts[lidx, b + 1] - lo               # (Q, V)
     offs = jnp.arange(cap, dtype=jnp.int32)              # (cap,)
-    idx = lo[..., None] + offs                           # (Q, L, cap)
+    idx = lo[..., None] + offs                           # (Q, V, cap)
     valid = offs[None, None, :] < size[..., None]
     n = tables.n
     gathered = tables.perm[lidx[..., None], jnp.clip(idx, 0, n - 1)]
     cands = jnp.where(valid, gathered, jnp.int32(sentinel))
     q = qbuckets.shape[0]
-    return cands.reshape(q, tables.L * cap)
+    return cands.reshape(q, qbuckets.shape[1] * cap)

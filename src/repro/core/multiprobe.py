@@ -20,12 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hll import hash32
 from repro.core.lsh.families import SimHash, _mix_words_to_bucket
-from repro.core.lsh.tables import LSHTables
+from repro.core.lsh.tables import (LSHTables, bucket_counts,
+                                   gather_candidates, gather_registers)
 
-__all__ = ["probe_codes", "probe_buckets", "multiprobe_counts",
-           "multiprobe_registers", "multiprobe_candidates"]
+__all__ = ["probe_codes", "probe_buckets", "flatten_probes",
+           "multiprobe_counts", "multiprobe_registers",
+           "multiprobe_candidates"]
 
 _U = jnp.uint32
 
@@ -61,39 +62,39 @@ def probe_buckets(fam: SimHash, params, queries: jax.Array,
     return _mix_words_to_bucket(pcodes, num_buckets)
 
 
-def _flat(qbuckets_probe: jax.Array) -> jax.Array:
+def flatten_probes(qbuckets_probe: jax.Array):
+    """(Q, L, T) probe set -> ((Q, L*T) qbuckets, (L*T,) table map).
+
+    Treat (table, probe) pairs as L*T virtual tables hitting the SAME
+    physical table — repeat the table index per probe.  The returned
+    pair plugs straight into the engine segments: pass the flat buckets
+    as ``qbuckets`` and the map as each segment's ``tidx``, and the
+    whole pipeline (estimate terms, dead-count correction, candidate
+    gather, delta equality scan) runs over the probed bucket set —
+    multi-probe is delta/level-aware for free.
+    """
     q, L, t = qbuckets_probe.shape
-    # Treat (table, probe) pairs as L*T virtual tables hitting the SAME
-    # physical table — repeat the table index per probe.
     return qbuckets_probe.reshape(q, L * t), jnp.repeat(
         jnp.arange(L, dtype=jnp.int32), t)
 
 
+_flat = flatten_probes
+
+
 def multiprobe_counts(tables: LSHTables, qb_probe: jax.Array) -> jax.Array:
     """(Q, L, T) probed buckets -> (Q, L*T) bucket sizes."""
-    flatb, tidx = _flat(qb_probe)
-    lo = tables.starts[tidx[None, :], flatb]
-    hi = tables.starts[tidx[None, :], flatb + 1]
-    return hi - lo
+    flatb, tidx = flatten_probes(qb_probe)
+    return bucket_counts(tables, flatb, tidx=tidx)
 
 
 def multiprobe_registers(tables: LSHTables, qb_probe: jax.Array) -> jax.Array:
     """(Q, L, T) probed buckets -> (Q, L*T, m) HLL registers."""
-    flatb, tidx = _flat(qb_probe)
-    return tables.registers[tidx[None, :], flatb]
+    flatb, tidx = flatten_probes(qb_probe)
+    return gather_registers(tables, flatb, tidx=tidx)
 
 
 def multiprobe_candidates(tables: LSHTables, qb_probe: jax.Array, cap: int,
                           sentinel: int) -> jax.Array:
     """(Q, L, T) probed buckets -> (Q, L*T*cap) candidate ids."""
-    flatb, tidx = _flat(qb_probe)
-    lo = tables.starts[tidx[None, :], flatb]            # (Q, L*T)
-    size = tables.starts[tidx[None, :], flatb + 1] - lo
-    offs = jnp.arange(cap, dtype=jnp.int32)
-    idx = lo[..., None] + offs
-    valid = offs[None, None, :] < size[..., None]
-    n = tables.n
-    gathered = tables.perm[tidx[None, :, None],
-                           jnp.clip(idx, 0, n - 1)]
-    cands = jnp.where(valid, gathered, jnp.int32(sentinel))
-    return cands.reshape(qb_probe.shape[0], -1)
+    flatb, tidx = flatten_probes(qb_probe)
+    return gather_candidates(tables, flatb, cap, sentinel, tidx=tidx)

@@ -14,9 +14,16 @@ both branches densely — partitioning is the performance-correct port.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core.engine import (RouteEstimate, _pad_size, compact_results,
                                estimate_routes, estimate_routes_dynamic,
                                finalize_route, partition_indices)
+
+warnings.warn(
+    "repro.core.router is a compatibility shim and will be removed in the "
+    "next release; import from repro.core.engine instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["RouteEstimate", "estimate_routes", "estimate_routes_dynamic",
            "finalize_route", "partition_indices", "compact_results"]

@@ -101,18 +101,21 @@ def linear_search(x: jax.Array, q: jax.Array, r: float, metric: str,
 @functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk"))
 def lsh_search(x: jax.Array, tables: LSHTables, qbuckets: jax.Array,
                q: jax.Array, r: float, metric: str, cap: int,
-               q_chunk: int = 32):
+               q_chunk: int = 32, tidx: jax.Array | None = None):
     """LSH-based search (steps S2+S3).
 
     x: (n, d) database rows (or (n, W) packed codes for hamming);
-    qbuckets: (Q, L) bucket of each query per table; q: (Q, d) queries.
-    Returns (ids (Q, L*cap), dists, mask) — deduped, verified.
+    qbuckets: (Q, V) bucket of each query per probed table (V = L, or
+    L*T under multi-probe with ``tidx`` mapping probe columns to
+    physical tables); q: (Q, d) queries.
+    Returns (ids (Q, V*cap), dists, mask) — deduped, verified.
     Processes queries in chunks of ``q_chunk`` to bound the gathered
-    candidate working set (L*cap rows of d floats per query).
+    candidate working set (V*cap rows of d floats per query).
     """
     n = x.shape[0]
     sentinel = n
-    cands = gather_candidates(tables, qbuckets, cap, sentinel)  # (Q, C)
+    cands = gather_candidates(tables, qbuckets, cap, sentinel,
+                              tidx=tidx)                        # (Q, C)
     thresh = ops.metric_radius_transform(metric, r)
 
     def chunk_fn(args):

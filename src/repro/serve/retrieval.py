@@ -44,6 +44,11 @@ class RetrievalConfig:
     delta_capacity: int = 4096
     compact_delta_fill: float = 1.0
     compact_tombstone_ratio: float = 0.25
+    # LSM level-stack knobs: fanout bounds segments per level; step_rows
+    # switches merges from synchronous drain to bounded off-query-path
+    # steps (RetrievalService ticks them between batches).
+    compact_fanout: int = 4
+    compact_step_rows: Optional[int] = None
     # Mesh sharding: set to shard the corpus over `mesh_axis`.
     mesh: Optional[Mesh] = None
     mesh_axis: str = "data"
@@ -63,6 +68,7 @@ class RetrievalService:
                                    ShardedDynamicHybridIndex]] = None
         self._queries_served = 0
         self._linear_served = 0
+        self._compaction_ticks = 0
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         return self._embed(self.params, batch)
@@ -82,7 +88,9 @@ class RetrievalService:
             cost_model=CostModel(alpha=1.0, beta=r.beta_over_alpha),
             policy=CompactionPolicy(
                 delta_fill=r.compact_delta_fill,
-                tombstone_ratio=r.compact_tombstone_ratio))
+                tombstone_ratio=r.compact_tombstone_ratio,
+                fanout=r.compact_fanout,
+                step_rows=r.compact_step_rows))
         if r.mesh is not None:
             self.index = ShardedDynamicHybridIndex(
                 fam, mesh=r.mesh, data_axis=r.mesh_axis,
@@ -110,7 +118,13 @@ class RetrievalService:
 
     def query(self, batch: Dict[str, jax.Array],
               radius: Optional[float] = None):
-        """Returns (QueryResult | ShardedQueryResult, embeddings)."""
+        """Returns (QueryResult | ShardedQueryResult, embeddings).
+
+        Deliberately does NOT advance compaction: with
+        ``compact_step_rows`` set, merge steps belong between batches —
+        wire ``compaction_tick`` as the scheduler's ``background_tick``
+        (or call it from the serving loop), never inside a request.
+        """
         assert self.index is not None, "call index_corpus first"
         q = self.embed(batch)
         res = self.index.query(q, radius or self.rcfg.radius)
@@ -120,13 +134,27 @@ class RetrievalService:
         self._linear_served += res.n_linear
         return res, q
 
+    def compaction_tick(self) -> bool:
+        """Advance pending LSM merge work by one bounded step (the
+        off-query-path hook: wire it as ``ShapeBucketScheduler``'s
+        ``background_tick``, or call it between batches).  Returns True
+        while more compaction work remains."""
+        if self.index is None:
+            return False
+        self._compaction_ticks += 1
+        return bool(self.index.compact_step(self.rcfg.compact_step_rows))
+
     @property
     def stats(self) -> Dict[str, float]:
         served = max(self._queries_served, 1)
         out = {"queries": self._queries_served,
                "linear_served": self._linear_served,
                "frac_linear": self._linear_served / served,
+               "compaction_ticks": self._compaction_ticks,
                "index_size": self.index.n if self.index else 0}
         if self.index is not None:
+            # includes the per-level LSM counters: segments, levels,
+            # pending_merges, merges_per_level, rows_merged_per_level,
+            # compact_steps, freezes, ...
             out.update(self.index.index_stats())
         return out

@@ -6,6 +6,12 @@ accumulates requests, forms batches padded to power-of-two sizes
 paper's cost estimator FIRST so that a micro-batch executes a single
 strategy (per-query lax.cond would run both branches densely on TPU;
 see DESIGN.md §2).
+
+The scheduler is also the natural interleaving point for *off-query-
+path* index maintenance: register a ``background_tick`` (typically
+``RetrievalService.compaction_tick``) and it runs once per formed
+batch, between query batches — budgeted LSM merge steps advance while
+no request is in flight instead of stalling one.
 """
 from __future__ import annotations
 
@@ -14,7 +20,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.router import partition_indices
+from repro.core.engine import partition_indices
 
 
 @dataclasses.dataclass
@@ -24,11 +30,14 @@ class Request:
 
 
 class ShapeBucketScheduler:
-    def __init__(self, max_batch: int = 64, min_bucket: int = 8):
+    def __init__(self, max_batch: int = 64, min_bucket: int = 8,
+                 background_tick: Optional[Callable[[], Any]] = None):
         self.max_batch = max_batch
         self.min_bucket = min_bucket
+        self.background_tick = background_tick
         self.queue: List[Request] = []
         self._uid = 0
+        self._ticks = 0
 
     def submit(self, payload) -> int:
         self._uid += 1
@@ -45,11 +54,22 @@ class ShapeBucketScheduler:
         """Pop up to max_batch requests; returns (requests, padded_size).
 
         Padded size is the pow2 bucket: the runner repeats the last
-        payload to fill and drops the padded results.
+        payload to fill and drops the padded results.  A registered
+        ``background_tick`` runs here — after the batch is formed,
+        before the runner executes it — so bounded maintenance work
+        (e.g. one LSM ``compact_step``) interleaves between query
+        batches instead of stalling one.
         """
         take = self.queue[:self.max_batch]
         self.queue = self.queue[len(take):]
+        if self.background_tick is not None:
+            self._ticks += 1
+            self.background_tick()
         return take, self._bucket(len(take))
+
+    @property
+    def ticks(self) -> int:
+        return self._ticks
 
 
 def route_and_group(estimates_use_lsh: np.ndarray, min_bucket: int = 8):

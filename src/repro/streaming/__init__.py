@@ -1,22 +1,27 @@
 """Streaming index subsystem: incremental inserts/deletes over the
 static Hybrid LSH core.
 
-  * ``DynamicHybridIndex``  — main segment + delta segment + tombstones,
-                              with HLL-aware compaction
-  * ``ShardedDynamicHybridIndex`` — the same segment state per mesh
+  * ``DynamicHybridIndex``  — delta segment + multi-level LSM segment
+                              stack + tombstones, with tiered, budgeted
+                              off-query-path compaction
+  * ``ShardedDynamicHybridIndex`` — the same level-stack state per mesh
                               shard, pmax-merged HLL routing estimates,
-                              per-shard compaction (streaming.sharded)
+                              per-shard freeze/merge (streaming.sharded)
   * ``streaming.delta``     — fixed-capacity append-only delta segment
                               (+ its engine ``DeltaView`` adapter)
-  * ``streaming.tombstones``— main-segment tombstone bitmap + per-bucket
+  * ``streaming.tombstones``— per-segment tombstone bitmap + per-bucket
                               dead counts (the engine's correction term)
-  * ``streaming.segment``   — immutable main segment (Algorithm 1 build)
-  * ``streaming.compaction``— trigger policy + compaction stats
+  * ``streaming.segment``   — frozen segments, freeze (Algorithm 1 over
+                              a padded block) and the ``SegmentStack``
+                              with incremental ``compact_step`` merges
+  * ``streaming.compaction``— tiered trigger policy + per-level stats
 """
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
 from repro.streaming.delta import DeltaSegment, DeltaView, make_delta
 from repro.streaming.index import DynamicHybridIndex
-from repro.streaming.segment import MainSegment, build_main
+from repro.streaming.segment import (FrozenSegment, MainSegment,
+                                     SegmentStack, build_main,
+                                     freeze_segment)
 from repro.streaming.sharded import (ShardedDynamicHybridIndex,
                                      ShardedQueryResult)
 from repro.streaming.tombstones import Tombstones, make_tombstones
@@ -24,4 +29,5 @@ from repro.streaming.tombstones import Tombstones, make_tombstones
 __all__ = ["DynamicHybridIndex", "ShardedDynamicHybridIndex",
            "ShardedQueryResult", "CompactionPolicy", "CompactionStats",
            "DeltaSegment", "DeltaView", "make_delta", "MainSegment",
-           "build_main", "Tombstones", "make_tombstones"]
+           "FrozenSegment", "SegmentStack", "build_main", "freeze_segment",
+           "Tombstones", "make_tombstones"]

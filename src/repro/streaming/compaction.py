@@ -1,46 +1,117 @@
-"""Compaction policy + bookkeeping for the streaming index.
+"""Tiered compaction policy + per-level bookkeeping for the segment stack.
 
-Compaction folds the delta segment and drops tombstoned rows by
-rebuilding the main segment through the existing ``build_tables`` fusion
-— the one batch pass the paper's Algorithm 1 already optimizes.  It is
-triggered by either pressure signal:
+The streaming index keeps its frozen segments in an LSM-style level
+stack (``streaming.segment.SegmentStack``).  Three kinds of maintenance
+work exist, and this module decides when each runs:
 
-  * delta fill      — the fixed-capacity delta is (nearly) full, so
-                      inserts would block;
-  * tombstone ratio — dead main rows waste gather bandwidth and widen
-                      the gap between the HLL estimate and live reality.
+  * freeze  — the fixed-capacity delta is (nearly) full; its live rows
+              are sealed into an immutable level-0 minor segment through
+              the ``build_tables`` fusion.  O(delta_capacity), cheap.
+  * merge   — a level holds >= ``fanout`` segments; they fuse into one
+              segment at the next level.  Each row is merged O(log n)
+              times over its lifetime instead of once per delta fill.
+  * full    — the global tombstone ratio crossed ``tombstone_ratio``;
+              every frozen segment merges into one, dropping dead rows.
+
+Merges are *scheduled*, not run inline: the index materializes them as
+``PendingMerge`` work items whose gather+hash cost is paid in bounded
+``compact_step(budget_rows)`` increments off the query path.  With
+``step_rows=None`` the index drains scheduled merges synchronously
+(the simple single-host default); the serving layer sets ``step_rows``
+and interleaves ticks between query batches.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 __all__ = ["CompactionPolicy", "CompactionStats"]
 
 
 @dataclasses.dataclass(frozen=True)
 class CompactionPolicy:
-    delta_fill: float = 1.0        # compact when delta count/capacity >= this
-    tombstone_ratio: float = 0.25  # compact when dead/main >= this
+    delta_fill: float = 1.0        # freeze when delta count/capacity >= this
+    tombstone_ratio: float = 0.25  # full merge when dead/frozen-rows >= this
+    fanout: int = 4                # merge a level when it holds >= fanout segs
+    step_rows: Optional[int] = None  # None: drain merges synchronously;
+    #                                  set: only budgeted compact_step() runs
 
-    def reason(self, *, delta_count: int, delta_capacity: int,
-               n_main: int, n_dead: int) -> Optional[str]:
-        """Why compaction should run now, or None."""
+    # ------------------------------------------------------------ triggers
+    def freeze_reason(self, *, delta_count: int,
+                      delta_capacity: int) -> Optional[str]:
+        """Why the delta should freeze into a level-0 segment now."""
         if delta_capacity and delta_count / delta_capacity >= self.delta_fill:
             return "delta_full"
-        if n_main and n_dead / n_main >= self.tombstone_ratio:
+        return None
+
+    def wants_full_merge(self, *, n_rows: int, n_dead: int) -> bool:
+        """Global tombstone pressure: fold every level, drop dead rows."""
+        return bool(n_rows) and n_dead / n_rows >= self.tombstone_ratio
+
+    def merge_levels(self, level_counts: Dict[int, int]) -> List[int]:
+        """Levels whose segment count overflowed (ascending).
+
+        Fanout is clamped to >= 2: merging single-segment levels would
+        cascade forever (every merge re-creates a one-segment level).
+        """
+        fanout = max(self.fanout, 2)
+        return sorted(k for k, c in level_counts.items() if c >= fanout)
+
+    def plan_merges(self, *, level_counts: Dict[int, int], n_rows: int,
+                    n_dead: int, n_live: int, unit: int,
+                    can_full: bool) -> List[Tuple[str, Optional[int], int]]:
+        """The one merge-decision tree, shared by the single-host and
+        sharded indexes: ``[(reason, source_level | None, target)]``.
+
+        ``level_counts``/``n_*`` must already exclude segments that are
+        inputs of a pending merge; ``can_full`` says no segment is
+        pending (a tombstone full-merge needs every segment).  Tombstone
+        pressure wins over level overflow — the full merge subsumes it.
+        """
+        if n_dead > 0 and can_full and self.wants_full_merge(
+                n_rows=n_rows, n_dead=n_dead):
+            return [("tombstones", None, self.level_for(n_live, unit))]
+        return [("level_overflow", lv, lv + 1)
+                for lv in self.merge_levels(level_counts)]
+
+    def level_for(self, n_rows: int, unit: int) -> int:
+        """Nominal level of a segment of ``n_rows`` built in one piece
+        (``unit`` = the freeze granularity, i.e. the delta capacity)."""
+        level, budget = 0, max(int(unit), 1)
+        while n_rows > budget and level < 48:
+            level += 1
+            budget *= max(self.fanout, 2)
+        return level
+
+    # ------------------------------------------------- legacy entry point
+    def reason(self, *, delta_count: int, delta_capacity: int,
+               n_main: int, n_dead: int) -> Optional[str]:
+        """Pre-stack trigger surface (kept for external callers)."""
+        r = self.freeze_reason(delta_count=delta_count,
+                               delta_capacity=delta_capacity)
+        if r:
+            return r
+        if self.wants_full_merge(n_rows=n_main, n_dead=n_dead):
             return "tombstones"
         return None
 
 
 @dataclasses.dataclass
 class CompactionStats:
-    compactions: int = 0
+    compactions: int = 0        # completed merges + full compactions
+    freezes: int = 0            # delta -> level-0 seals
     last_reason: Optional[str] = None
     last_seconds: float = 0.0
     total_seconds: float = 0.0  # cumulative wall-clock spent compacting
     rows_dropped: int = 0       # tombstoned rows reclaimed, cumulative
+    rows_frozen: int = 0
+    steps: int = 0              # compact_step() calls that advanced a merge
+    last_merge_steps: int = 0   # steps the most recent merge took
+    merges_per_level: Dict[int, int] = dataclasses.field(
+        default_factory=dict)           # target level -> completed merges
+    rows_merged_per_level: Dict[int, int] = dataclasses.field(
+        default_factory=dict)           # target level -> rows written
 
     def record(self, reason: str, t0: float, dropped: int) -> None:
         self.compactions += 1
@@ -49,9 +120,40 @@ class CompactionStats:
         self.total_seconds += self.last_seconds
         self.rows_dropped += int(dropped)
 
+    def record_freeze(self, rows: int) -> None:
+        self.freezes += 1
+        self.rows_frozen += int(rows)
+
+    def record_step(self) -> None:
+        self.steps += 1
+
+    def record_merge(self, level: int, rows: int, steps: int,
+                     seconds: float, dropped: int,
+                     reason: str = "merge") -> None:
+        """``seconds`` is the merge's accumulated *work* time (the sum of
+        its compact_step durations) — not schedule-to-swap wall clock,
+        which under budgeted mode would count all the serving time
+        interleaved between steps as time spent compacting."""
+        self.compactions += 1
+        self.last_reason = reason
+        self.last_seconds = float(seconds)
+        self.total_seconds += self.last_seconds
+        self.rows_dropped += int(dropped)
+        self.last_merge_steps = int(steps)
+        self.merges_per_level[int(level)] = (
+            self.merges_per_level.get(int(level), 0) + 1)
+        self.rows_merged_per_level[int(level)] = (
+            self.rows_merged_per_level.get(int(level), 0) + int(rows))
+
     def as_dict(self) -> Dict[str, object]:
         return {"compactions": self.compactions,
+                "freezes": self.freezes,
                 "last_reason": self.last_reason,
                 "last_seconds": self.last_seconds,
                 "total_seconds": self.total_seconds,
-                "rows_dropped": self.rows_dropped}
+                "rows_dropped": self.rows_dropped,
+                "rows_frozen": self.rows_frozen,
+                "compact_steps": self.steps,
+                "last_merge_steps": self.last_merge_steps,
+                "merges_per_level": dict(self.merges_per_level),
+                "rows_merged_per_level": dict(self.rows_merged_per_level)}

@@ -104,9 +104,10 @@ class DeltaView:
     impl: Optional[str] = None
     n_live: Union[int, jax.Array] = 0
     n_scan: Union[int, jax.Array] = 0
+    tidx: Optional[jax.Array] = None   # (V,) multi-probe column->table map
 
     def estimate_terms(self, qbuckets: jax.Array) -> SegmentEstimate:
-        coll, dist = collision_stats(self.delta, qbuckets)
+        coll, dist = collision_stats(self.delta, qbuckets, tidx=self.tidx)
         return SegmentEstimate(collisions=coll, cand_exact=dist,
                                n_live=self.n_live, n_scan=self.n_scan)
 
@@ -114,19 +115,33 @@ class DeltaView:
                lsh_route: bool):
         ids, dists, mask = search(self.delta, qbuckets, q, r, self.metric,
                                   require_collision=lsh_route,
-                                  impl=self.impl)
+                                  impl=self.impl, tidx=self.tidx)
         return jnp.where(mask, ids, EXT_SENTINEL), dists, mask
 
 
+def _row_buckets(delta: DeltaSegment,
+                 tidx: jax.Array | None) -> jax.Array:
+    """(C + 1, V) per-row buckets aligned with the qbuckets columns.
+
+    Identity for single-probe; under multi-probe each physical table's
+    column repeats T times (``tidx``), so a probed query bucket compares
+    against the row's bucket in the *same* physical table.
+    """
+    if tidx is None:
+        return delta.bucket_ids
+    return delta.bucket_ids[:, tidx.astype(jnp.int32)]
+
+
 @jax.jit
-def collision_stats(delta: DeltaSegment, qbuckets: jax.Array):
+def collision_stats(delta: DeltaSegment, qbuckets: jax.Array,
+                    tidx: jax.Array | None = None):
     """Exact per-query delta counts: (collisions, distinct), both (Q,).
 
     The streaming analogue of ``bucket_counts`` + the HLL candSize term,
     except both are exact (and already tombstone-aware via ``live``).
     """
     hit = (qbuckets[:, None, :].astype(jnp.int32)
-           == delta.bucket_ids[None, :, :])          # (Q, C + 1, L)
+           == _row_buckets(delta, tidx)[None, :, :])   # (Q, C + 1, V)
     hit = hit & delta.live[None, :, None]
     collisions = jnp.sum(hit, axis=(1, 2), dtype=jnp.int32)
     distinct = jnp.sum(jnp.any(hit, axis=-1), axis=1, dtype=jnp.int32)
@@ -137,12 +152,12 @@ def collision_stats(delta: DeltaSegment, qbuckets: jax.Array):
                    static_argnames=("metric", "require_collision", "impl"))
 def search(delta: DeltaSegment, qbuckets: jax.Array, q: jax.Array, r: float,
            metric: str, require_collision: bool = True,
-           impl: str | None = None):
+           impl: str | None = None, tidx: jax.Array | None = None):
     """Exact scan of the delta segment -> (ext_ids, dists, mask), (Q, C+1).
 
     ``require_collision=True`` mirrors LSH-route semantics (a delta row
-    is a candidate only if it collides in >= 1 table); ``False`` mirrors
-    the linear route (every live row is checked).
+    is a candidate only if it collides in >= 1 probed bucket); ``False``
+    mirrors the linear route (every live row is checked).
     """
     if metric == "hamming":
         dists = ops.hamming_dist(q, delta.x, impl=impl).astype(jnp.float32)
@@ -152,7 +167,7 @@ def search(delta: DeltaSegment, qbuckets: jax.Array, q: jax.Array, r: float,
     mask = (dists <= thresh) & delta.live[None, :]
     if require_collision:
         hit = jnp.any(qbuckets[:, None, :].astype(jnp.int32)
-                      == delta.bucket_ids[None, :, :], axis=-1)
+                      == _row_buckets(delta, tidx)[None, :, :], axis=-1)
         mask = mask & hit
     ids = jnp.broadcast_to(delta.ids[None, :], dists.shape)
     return ids, dists, mask

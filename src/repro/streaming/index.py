@@ -1,30 +1,43 @@
 """DynamicHybridIndex — incremental inserts/deletes over the static core.
 
-Segment architecture (LSM-flavoured, one level):
+Segment architecture (LSM, multi-level):
 
-  * main segment   — immutable CSR ``LSHTables`` + per-bucket HLLs, built
-    by the paper's Algorithm 1 fusion.  Deletes tombstone rows
-    (``streaming.tombstones``); the tables never mutate.
   * delta segment  — fixed-capacity append-only buffers
     (``streaming.delta``); inserts are one fused ``.at[]`` scatter, so
     repeated same-size inserts never retrace.  Counts are exact.
-  * compaction     — when the delta fills or tombstones accumulate
-    (``CompactionPolicy``), live rows from both segments are folded into
-    a fresh main segment via ``build_tables``.
+  * segment stack  — immutable frozen segments arranged in levels
+    (``streaming.segment.SegmentStack``).  When the delta fills it is
+    *frozen* into a level-0 minor segment (CSR ``LSHTables`` +
+    per-bucket HLLs over just the delta rows — O(delta_capacity), the
+    older data is untouched); a tiered ``CompactionPolicy`` merges a
+    level into the next when it overflows, so compaction cost
+    amortizes O(log n)-style instead of O(n) per delta fill.
+  * tombstones     — per-segment live bitmap + per-bucket dead counts;
+    deletes never mutate tables.
 
-Queries hand both segments to the shared ``QueryEngine``
-(``core.engine``): the main segment as a tombstone-aware
+Merges run *off the query path*: they are staged in bounded
+``compact_step(budget_rows)`` increments (gather + hash at most
+``budget_rows`` rows per step) and the merged segment swaps in
+atomically; queries are served from the old level list until then.
+With ``CompactionPolicy.step_rows=None`` (default) scheduled merges
+drain synchronously after each mutation — the serving layer sets
+``step_rows`` and ticks ``compact_step`` between query batches.
+
+Queries hand the whole stack to the shared ``QueryEngine``
+(``core.engine``): every frozen segment as a tombstone-aware
 ``TableSegment`` (corrected estimates, dead rows masked after search,
 *external* ids reported), the delta as the exact ``DeltaView``.  A
-mixed insert/delete workload therefore reports exactly the candidates a
-fresh ``HybridLSHIndex.build()`` on the surviving corpus would (same
-family parameters, cap permitting).  The mesh-sharded variant lives in
-``streaming.sharded``.
+mixed insert/delete workload therefore reports exactly the candidates
+a fresh ``HybridLSHIndex.build()`` on the surviving corpus would (same
+family parameters, cap permitting) — regardless of how many levels
+exist or how far a pending merge has progressed.  ``num_probes > 1``
+routes the multi-probe bucket set through the same path (SimHash
+only).  The mesh-sharded variant lives in ``streaming.sharded``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Iterable, List, Optional, Sequence
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +46,13 @@ import numpy as np
 from repro.core.cost_model import CostModel
 from repro.core.engine import (QueryEngine, QueryResult, RouteEstimate,
                                TableSegment, _pad_size)
+from repro.core.lsh.families import bucket_fn_for
 from repro.core.lsh.tables import LSHTables
 from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
-from repro.streaming.segment import MainSegment, build_main
+from repro.streaming.segment import (FrozenSegment, MainSegment,
+                                     SegmentStack, freeze_segment)
 
 __all__ = ["DynamicHybridIndex"]
 
@@ -45,7 +60,7 @@ _pad_pow2 = _pad_size                # same pow2 padding as the router groups
 
 
 class DynamicHybridIndex:
-    """Streaming Hybrid LSH index: insert / delete / compact / query."""
+    """Streaming Hybrid LSH index: insert / delete / freeze / merge / query."""
 
     def __init__(self, family, *, num_buckets: int, m: int = 64,
                  cap: int = 64, delta_capacity: int = 4096,
@@ -64,17 +79,14 @@ class DynamicHybridIndex:
         self.policy = policy
         self.impl = impl
         self._engine = QueryEngine(cost_model, impl=impl)
-        self._bucket_fn = jax.jit(functools.partial(
-            self.family.bucket_ids, num_buckets=self.num_buckets))
+        self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
 
-        self.main: Optional[MainSegment] = None
-        self.tomb: Optional[tomb_lib.Tombstones] = None
+        self.stack = SegmentStack()
         self.delta: Optional[delta_lib.DeltaSegment] = None
         self.stats = CompactionStats()
-        # Host bookkeeping: external id -> ("m", row) | ("d", slot).
+        # Host bookkeeping: ext id -> ("m", uid, row) | ("d", slot).
         self._loc: Dict[int, tuple] = {}
         self._next_id = 0
-        self._n_main_live = 0
         self._n_delta_live = 0
         self._inserts = 0
         self._deletes = 0
@@ -82,42 +94,60 @@ class DynamicHybridIndex:
     # ------------------------------------------------------------- sizes
     @property
     def n(self) -> int:
-        """Live document count (main live + delta live)."""
-        return self._n_main_live + self._n_delta_live
+        """Live document count (frozen live + delta live)."""
+        return self.stack.n_live + self._n_delta_live
 
     @property
     def n_dead(self) -> int:
-        return (self.main.n if self.main else 0) - self._n_main_live
+        return self.stack.n_dead
+
+    # ------------------------------------------------- compat properties
+    @property
+    def main(self) -> Optional[MainSegment]:
+        """The sole frozen segment, when the stack holds exactly one
+        (the pre-stack "main segment" view; None otherwise)."""
+        if len(self.stack.segments) == 1:
+            return self.stack.segments[0].seg
+        return None
+
+    @property
+    def tomb(self) -> Optional[tomb_lib.Tombstones]:
+        if len(self.stack.segments) == 1:
+            return self.stack.segments[0].tomb
+        return None
 
     # ------------------------------------------------------------- build
     def build(self, x: jax.Array,
               ids: Optional[Sequence[int]] = None) -> "DynamicHybridIndex":
         """Initial batch build (Algorithm 1); ``ids`` default to 0..n-1."""
-        x = jnp.asarray(x)
+        x = np.asarray(x)
         if ids is None:
             ids = np.arange(x.shape[0], dtype=np.int64)
         else:
             ids = np.asarray(ids, np.int64)
             assert len(set(ids.tolist())) == len(ids), "duplicate ids"
-        self._set_main(x, ids)
-        self._reset_delta(x.shape[1], x.dtype)
+        self.stack = SegmentStack()
+        self._loc = {}
+        if x.shape[0] > 0:
+            self._add_frozen(x, ids,
+                             level=self.policy.level_for(
+                                 x.shape[0], self.delta_capacity))
+        self._reset_delta(x.shape[1] if x.ndim > 1 else 1, x.dtype)
         self._next_id = int(ids.max()) + 1 if len(ids) else 0
         return self
 
-    def _set_main(self, x: jax.Array, ext_ids: np.ndarray) -> None:
-        n = int(x.shape[0])
-        if n == 0:
-            self.main = None
-            self.tomb = None
-            self._n_main_live = 0
-        else:
-            self.main = build_main(x, jnp.asarray(ext_ids, jnp.int32),
-                                   self._bucket_fn, self.params,
-                                   self.num_buckets, self.m)
-            self.tomb = tomb_lib.make_tombstones(
-                n, self.main.tables.L, self.num_buckets)
-            self._n_main_live = n
-        self._loc = {int(e): ("m", i) for i, e in enumerate(ext_ids)}
+    def _add_frozen(self, x: np.ndarray, ext_ids: np.ndarray, level: int,
+                    bucket_rows: Optional[np.ndarray] = None
+                    ) -> FrozenSegment:
+        seg = freeze_segment(x, np.asarray(ext_ids, np.int64),
+                             self._bucket_fn, self.params,
+                             self.num_buckets, self.m,
+                             uid=self.stack.next_uid(), level=level,
+                             bucket_rows=bucket_rows)
+        self.stack.add(seg)
+        for i, e in enumerate(np.asarray(ext_ids).tolist()):
+            self._loc[int(e)] = ("m", seg.uid, i)
+        return seg
 
     def _reset_delta(self, d: int, dtype) -> None:
         self.delta = delta_lib.make_delta(self.delta_capacity, d,
@@ -129,8 +159,9 @@ class DynamicHybridIndex:
                ids: Optional[Sequence[int]] = None) -> np.ndarray:
         """Append documents; returns their external ids.
 
-        Splits the batch by remaining delta capacity, compacting between
-        chunks when the delta fills — inserts never block indefinitely.
+        Splits the batch by remaining delta capacity, freezing the delta
+        into a level-0 segment between chunks when it fills — inserts
+        never wait on a rebuild of older data.
         """
         rows = jnp.asarray(rows)
         if rows.shape[0] == 0:
@@ -151,7 +182,7 @@ class DynamicHybridIndex:
         while lo < rows.shape[0]:
             free = self.delta.capacity - int(self.delta.count)
             if free == 0:
-                self.compact(reason="delta_full")
+                self._freeze("delta_full")
                 free = self.delta.capacity
             take = min(free, rows.shape[0] - lo)
             self._insert_chunk(rows[lo:lo + take], ids[lo:lo + take])
@@ -185,26 +216,33 @@ class DynamicHybridIndex:
 
         Unknown (or already-deleted) ids are skipped unless ``strict``.
         """
-        main_rows, delta_slots = [], []
+        by_uid: Dict[int, List[int]] = {}
+        delta_slots: List[int] = []
         for e in ids:
             loc = self._loc.pop(int(e), None)
             if loc is None:
                 if strict:
                     raise KeyError(e)
                 continue
-            (main_rows if loc[0] == "m" else delta_slots).append(loc[1])
-        if main_rows:
-            k = len(main_rows)
+            if loc[0] == "d":
+                delta_slots.append(loc[1])
+            else:
+                by_uid.setdefault(loc[1], []).append(loc[2])
+        removed = 0
+        for uid, rows in by_uid.items():
+            f = self.stack.by_uid(uid)
+            k = len(rows)
             pk = _pad_pow2(k)
             rows_p = np.zeros(pk, np.int32)
-            rows_p[:k] = main_rows
+            rows_p[:k] = rows
             valid = np.zeros(pk, bool)
             valid[:k] = True
             # padded lanes point at row 0's buckets but add 0 there
-            row_buckets = self.main.bucket_ids[jnp.asarray(rows_p)]
-            self.tomb = tomb_lib.mark_dead(self.tomb, jnp.asarray(rows_p),
-                                           row_buckets, jnp.asarray(valid))
-            self._n_main_live -= k
+            row_buckets = f.seg.bucket_ids[jnp.asarray(rows_p)]
+            f.tomb = tomb_lib.mark_dead(f.tomb, jnp.asarray(rows_p),
+                                        row_buckets, jnp.asarray(valid))
+            f.n_live -= k
+            removed += k
         if delta_slots:
             k = len(delta_slots)
             pk = _pad_pow2(k)
@@ -215,84 +253,190 @@ class DynamicHybridIndex:
             self.delta = delta_lib.kill(self.delta, jnp.asarray(slots_p),
                                         jnp.asarray(valid))
             self._n_delta_live -= k
-        removed = len(main_rows) + len(delta_slots)
+            removed += k
         self._deletes += removed
         self._maybe_compact()
         return removed
 
     # --------------------------------------------------------- compaction
+    def _freeze(self, reason: str) -> None:
+        """Seal the delta's live rows into a level-0 minor segment.
+
+        O(delta_capacity): the delta already carries its hashes, so the
+        freeze is one fused ``build_tables`` over at most capacity rows.
+        """
+        if self.delta is None or int(self.delta.count) == 0:
+            return
+        c = self.delta.capacity
+        live = np.asarray(self.delta.live[:c])
+        x = np.asarray(self.delta.x[:c])[live]
+        ext = np.asarray(self.delta.ids[:c])[live].astype(np.int64)
+        bids = np.asarray(self.delta.bucket_ids[:c])[live]
+        self._reset_delta(self.delta.x.shape[1], self.delta.x.dtype)
+        if len(ext) == 0:
+            return
+        self._add_frozen(x, ext, level=0, bucket_rows=bids)
+        self.stats.record_freeze(len(ext))
+
     def _maybe_compact(self) -> None:
-        reason = self.policy.reason(
-            delta_count=int(self.delta.count) if self.delta else 0,
-            delta_capacity=self.delta_capacity,
-            n_main=self.main.n if self.main else 0,
-            n_dead=self.n_dead)
-        if reason:
-            self.compact(reason=reason)
+        if self.delta is not None:
+            r = self.policy.freeze_reason(
+                delta_count=int(self.delta.count),
+                delta_capacity=self.delta_capacity)
+            if r:
+                self._freeze(r)
+        self._schedule_merges()
+        if self.policy.step_rows is None:
+            self._drain()
+
+    def _schedule_merges(self) -> None:
+        """Materialize the policy's merge decisions as pending tasks."""
+        segs = self.stack.segments
+        if not segs:
+            return
+        pend = self.stack.pending_uids()
+        free = [s for s in segs if s.uid not in pend]
+        counts: Dict[int, int] = {}
+        for s in free:
+            counts[s.level] = counts.get(s.level, 0) + 1
+        for reason, src, target in self.policy.plan_merges(
+                level_counts=counts, n_rows=self.stack.n_rows,
+                n_dead=self.stack.n_dead, n_live=self.stack.n_live,
+                unit=self.delta_capacity, can_full=not pend):
+            uids = [s.uid for s in free if src is None or s.level == src]
+            self.stack.schedule(uids, target, reason)
+
+    def compact_step(self, budget_rows: Optional[int] = None) -> bool:
+        """Advance pending merge work by one bounded step (off-query-path
+        tick).  Gathers + hashes at most ``budget_rows`` rows; a merge
+        whose staging is complete swaps its segment in atomically.
+        Returns True while more work remains."""
+        if not self.stack.has_work:
+            return False
+        budget = int(budget_rows or self.policy.step_rows
+                     or max(self.delta_capacity, 1))
+        res = self.stack.compact_step(budget, self._bucket_fn, self.params,
+                                      self.num_buckets, self.m)
+        self.stats.record_step()
+        if res is not None:
+            if res.new is not None:
+                for e, i in res.moved:
+                    self._loc[e] = ("m", res.new.uid, i)
+            self.stats.record_merge(res.target_level, len(res.moved),
+                                    res.steps, res.seconds, res.dropped,
+                                    reason=res.reason)
+            self._schedule_merges()          # cascade up the levels
+        return self.stack.has_work
+
+    def _drain(self) -> None:
+        while self.stack.has_work:
+            self.compact_step(budget_rows=max(self.stack.n_rows, 1))
 
     def compact(self, reason: str = "manual") -> None:
-        """Fold delta + drop tombstones into a fresh main segment."""
-        import time
+        """Blocking full compaction: fold every frozen segment + the
+        delta into one segment (drops tombstones).  Pending merge
+        staging is discarded, not drained — its inputs are still
+        complete segments and the fold re-gathers everything, so
+        finishing a partial merge first would just build a segment the
+        fold immediately throws away."""
         t0 = time.perf_counter()
-        dropped = self.n_dead + (int(self.delta.count) - self._n_delta_live
-                                 if self.delta else 0)
-        parts_x, parts_id = [], []
-        if self.main is not None:
-            live = np.asarray(self.tomb.live[:self.main.n])
-            parts_x.append(np.asarray(self.main.x)[live])
-            parts_id.append(np.asarray(self.main.ids)[live])
+        self.stack.tasks = []
+        if not self.stack.segments and self.delta is None:
+            return
+        dropped = self.stack.n_dead
+        parts_x, parts_id, parts_b = [], [], []
+        for f in self.stack.segments:
+            live = np.asarray(f.tomb.live[:f.n_rows])
+            parts_x.append(np.asarray(f.seg.x[:f.n_rows])[live])
+            parts_id.append(np.asarray(f.seg.ids[:f.n_rows])[live])
+            parts_b.append(np.asarray(f.seg.bucket_ids[:f.n_rows])[live])
         if self.delta is not None:
             c = self.delta.capacity
+            dropped += int(self.delta.count) - self._n_delta_live
             live = np.asarray(self.delta.live[:c])
             parts_x.append(np.asarray(self.delta.x[:c])[live])
             parts_id.append(np.asarray(self.delta.ids[:c])[live])
+            parts_b.append(np.asarray(self.delta.bucket_ids[:c])[live])
         if not parts_x:
             return
-        x = jnp.asarray(np.concatenate(parts_x, axis=0))
+        x = np.concatenate(parts_x, axis=0)
         ext = np.concatenate(parts_id, axis=0).astype(np.int64)
-        self._set_main(x, ext)
-        self._reset_delta(x.shape[1] if x.ndim > 1 else 1, x.dtype)
+        bids = np.concatenate(parts_b, axis=0)
+        d = self.delta.x.shape[1] if self.delta is not None else (
+            x.shape[1] if x.ndim > 1 else 1)
+        dtype = self.delta.x.dtype if self.delta is not None else x.dtype
+        self.stack = SegmentStack()
+        self._loc = {}
+        if len(ext):
+            self._add_frozen(x, ext,
+                             level=self.policy.level_for(
+                                 len(ext), self.delta_capacity),
+                             bucket_rows=bids)
+        self._reset_delta(d, dtype)
         self.stats.record(reason, t0, dropped)
 
     # ------------------------------------------------------------- query
-    def _segments(self) -> List:
-        """Both segments as engine ``Segment`` adapters (main may be absent)."""
+    def _segments(self, tidx: Optional[jax.Array] = None) -> List:
+        """The whole stack + delta as engine ``Segment`` adapters."""
         segs: List = []
         metric = self.family.metric
-        if self.main is not None:
+        for f in self.stack.segments:
             segs.append(TableSegment(
-                tables=self.main.tables, x=self.main.x, metric=metric,
-                cap=self.cap, impl=self.impl, live=self.tomb.live,
-                tomb_counts=self.tomb.counts, ext_ids=self.main.ids,
-                n_live=self._n_main_live, n_scan=self.main.n))
+                tables=f.seg.tables, x=f.seg.x, metric=metric,
+                cap=self.cap, impl=self.impl, live=f.tomb.live,
+                tomb_counts=f.tomb.counts, ext_ids=f.seg.ids,
+                n_live=f.n_live, n_scan=f.n_pad, tidx=tidx))
         segs.append(delta_lib.DeltaView(
             self.delta, metric, impl=self.impl,
-            n_live=self._n_delta_live, n_scan=int(self.delta.count)))
+            n_live=self._n_delta_live, n_scan=int(self.delta.count),
+            tidx=tidx))
         return segs
 
-    def estimate(self, queries: jax.Array) -> RouteEstimate:
+    def _qbuckets(self, queries: jax.Array, num_probes: int
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+        if num_probes <= 1:
+            return self._bucket_fn(self.params, queries), None
+        if not hasattr(self.family, "margins"):
+            raise ValueError(
+                "multi-probe needs a family with probing sequences "
+                f"(SimHash); got {type(self.family).__name__}")
+        from repro.core import multiprobe as mp
+        qbp = mp.probe_buckets(self.family, self.params, queries,
+                               num_probes, self.num_buckets)
+        return mp.flatten_probes(qbp)
+
+    def estimate(self, queries: jax.Array,
+                 num_probes: int = 1) -> RouteEstimate:
         assert self.delta is not None, "index is empty: build/insert first"
-        qb = self._bucket_fn(self.params, jnp.asarray(queries))
-        return self._engine.estimate(self._segments(), qb)
+        qb, tidx = self._qbuckets(jnp.asarray(queries), num_probes)
+        return self._engine.estimate(self._segments(tidx), qb)
 
     def query(self, queries: jax.Array, r: float,
-              force: Optional[str] = None) -> QueryResult:
-        """Hybrid r-NN reporting over both segments; ids are external."""
+              force: Optional[str] = None,
+              num_probes: int = 1) -> QueryResult:
+        """Hybrid r-NN reporting over the whole stack; ids are external.
+
+        ``num_probes > 1`` probes the Lv et al. perturbation buckets in
+        every frozen level AND the delta (SimHash families only).
+        """
         assert self.delta is not None, "index is empty: build/insert first"
         queries = jnp.asarray(queries)
-        qb = self._bucket_fn(self.params, queries)
-        return self._engine.query(self._segments(), queries, qb, float(r),
-                                  force=force)
+        qb, tidx = self._qbuckets(queries, num_probes)
+        return self._engine.query(self._segments(tidx), queries, qb,
+                                  float(r), force=force)
 
     # ------------------------------------------------------ observability
     def index_stats(self) -> Dict[str, object]:
         out = {
             "n_live": self.n,
-            "n_main": self.main.n if self.main else 0,
+            "n_main": self.stack.n_rows,
             "n_main_dead": self.n_dead,
             "delta_count": int(self.delta.count) if self.delta else 0,
             "delta_live": self._n_delta_live,
             "delta_capacity": self.delta_capacity,
+            "segments": len(self.stack.segments),
+            "levels": self.stack.level_counts(),
+            "pending_merges": len(self.stack.tasks),
             "inserts": self._inserts,
             "deletes": self._deletes,
         }
@@ -301,38 +445,39 @@ class DynamicHybridIndex:
 
     # -------------------------------------------------------- checkpoint
     def state_dict(self) -> Dict[str, Dict[str, np.ndarray]]:
-        """Segment state as a flat-array pytree (CheckpointManager-ready).
+        """Stack + delta state as a nested flat-array pytree.
 
-        The family config + cost model are constructor arguments, not
-        state: restore into an index constructed with the same ones.
-        An empty main segment is encoded as zero-length arrays so the
-        tree structure (the restore template) is state-independent.
+        Frozen segments land under ``segments/<i>`` with their level/uid
+        metadata; the structure varies with the stack, so restore goes
+        through ``CheckpointManager.restore_index`` (manifest-driven, no
+        template needed).  Staged merge progress is volatile: a pending
+        merge's inputs are still complete segments, so dropping the
+        staging on restore loses no data — the policy just re-schedules.
         """
         L = self.family.L
         d = self.delta.x.shape[1] if self.delta is not None else 0
-        if self.main is not None:
-            t = self.main.tables
-            main = {"x": self.main.x, "ids": self.main.ids,
-                    "bucket_ids": self.main.bucket_ids,
-                    "perm": t.perm, "starts": t.starts,
-                    "registers": t.registers,
-                    "live": self.tomb.live, "tomb_counts": self.tomb.counts}
-        else:
-            main = {"x": np.zeros((0, d), np.float32),
-                    "ids": np.zeros((0,), np.int32),
-                    "bucket_ids": np.zeros((0, L), np.int32),
-                    "perm": np.zeros((L, 0), np.int32),
-                    "starts": np.zeros((L, self.num_buckets + 1), np.int32),
-                    "registers": np.zeros((L, self.num_buckets, self.m),
-                                          np.uint8),
-                    "live": np.zeros((1,), bool),
-                    "tomb_counts": np.zeros((L, self.num_buckets),
-                                            np.int32)}
+        segments: Dict[str, Dict] = {}
+        for i, f in enumerate(self.stack.segments):
+            t = f.seg.tables
+            segments[f"{i:04d}"] = {
+                "x": np.asarray(f.seg.x),
+                "ids": np.asarray(f.seg.ids),
+                "bucket_ids": np.asarray(f.seg.bucket_ids),
+                "perm": np.asarray(t.perm),
+                "starts": np.asarray(t.starts),
+                "registers": np.asarray(t.registers),
+                "live": np.asarray(f.tomb.live),
+                "tomb_counts": np.asarray(f.tomb.counts),
+                "meta": {"uid": np.int64(f.uid),
+                         "level": np.int64(f.level),
+                         "n_rows": np.int64(f.n_rows),
+                         "n_live": np.int64(f.n_live)},
+            }
         delta = (self.delta if self.delta is not None
                  else delta_lib.make_delta(self.delta_capacity, 1, L))
         return {
             "params": self.params,
-            "main": {k: np.asarray(v) for k, v in main.items()},
+            "segments": segments,
             "delta": {"x": np.asarray(delta.x),
                       "bucket_ids": np.asarray(delta.bucket_ids),
                       "ids": np.asarray(delta.ids),
@@ -341,35 +486,62 @@ class DynamicHybridIndex:
             # delta_d == 0 marks "never populated": the saved delta row
             # width is a placeholder and must not survive a restore.
             "meta": {"next_id": np.int64(self._next_id),
-                     "delta_d": np.int64(0 if self.delta is None else d)},
+                     "delta_d": np.int64(0 if self.delta is None else d),
+                     "next_uid": np.int64(self.stack._next_uid)},
         }
 
     def load_state_dict(self, state) -> "DynamicHybridIndex":
-        """Restore segment state saved by ``state_dict``."""
+        """Restore stack + delta state saved by ``state_dict``."""
         self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
-        self._bucket_fn = jax.jit(functools.partial(
-            self.family.bucket_ids, num_buckets=self.num_buckets))
-        ms, ds = state["main"], state["delta"]
-        x = jnp.asarray(ms["x"])
-        if x.shape[0] > 0:
-            self.main = MainSegment(
-                x=x, ids=jnp.asarray(ms["ids"], jnp.int32),
-                bucket_ids=jnp.asarray(ms["bucket_ids"], jnp.int32),
-                tables=LSHTables(jnp.asarray(ms["perm"], jnp.int32),
-                                 jnp.asarray(ms["starts"], jnp.int32),
-                                 jnp.asarray(ms["registers"], jnp.uint8)))
-            self.tomb = tomb_lib.Tombstones(
-                live=jnp.asarray(ms["live"], bool),
-                counts=jnp.asarray(ms["tomb_counts"], jnp.int32))
-            self._n_main_live = int(np.asarray(ms["live"]).sum())
-        else:
-            self.main = None
-            self.tomb = None
-            self._n_main_live = 0
+        self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
+        self.stack = SegmentStack()
+        self._loc = {}
+        segs = dict(state.get("segments") or {})
+        ms = state.get("main")
+        if ms is not None and np.asarray(ms["x"]).shape[0] > 0:
+            # pre-stack checkpoint format (one "main" segment, exact
+            # rows, no meta): migrate it to a single frozen segment —
+            # ignoring it would silently restore an empty index
+            n = int(np.asarray(ms["x"]).shape[0])
+            segs["main"] = {
+                **ms,
+                "meta": {"uid": np.int64(0), "level": np.int64(
+                    self.policy.level_for(n, self.delta_capacity)),
+                    "n_rows": np.int64(n),
+                    "n_live": np.asarray(ms["live"])[:n].sum()},
+            }
+        for key in sorted(segs):
+            s = segs[key]
+            meta = s["meta"]
+            f = FrozenSegment(
+                uid=int(np.asarray(meta["uid"])),
+                level=int(np.asarray(meta["level"])),
+                seg=MainSegment(
+                    x=jnp.asarray(s["x"]),
+                    ids=jnp.asarray(s["ids"], jnp.int32),
+                    bucket_ids=jnp.asarray(s["bucket_ids"], jnp.int32),
+                    tables=LSHTables(jnp.asarray(s["perm"], jnp.int32),
+                                     jnp.asarray(s["starts"], jnp.int32),
+                                     jnp.asarray(s["registers"],
+                                                 jnp.uint8))),
+                tomb=tomb_lib.Tombstones(
+                    live=jnp.asarray(s["live"], bool),
+                    counts=jnp.asarray(s["tomb_counts"], jnp.int32)),
+                n_rows=int(np.asarray(meta["n_rows"])),
+                n_live=int(np.asarray(meta["n_live"])))
+            self.stack.add(f)
+            live = np.asarray(f.tomb.live[:f.n_rows])
+            eids = np.asarray(f.seg.ids[:f.n_rows])
+            for i in np.nonzero(live)[0]:
+                self._loc[int(eids[i])] = ("m", f.uid, int(i))
+        self.stack._next_uid = int(np.asarray(
+            state["meta"].get("next_uid",
+                              max([s.uid for s in self.stack.segments],
+                                  default=-1) + 1)))
+        ds = state["delta"]
         if int(np.asarray(state["meta"].get("delta_d", 1))) == 0:
             self.delta = None        # saved before first build/insert
             self._n_delta_live = 0
-            dl = np.zeros((0,), bool)
         else:
             self.delta = delta_lib.DeltaSegment(
                 x=jnp.asarray(ds["x"]),
@@ -380,17 +552,9 @@ class DynamicHybridIndex:
             self.delta_capacity = self.delta.capacity
             dl = np.asarray(self.delta.live)
             self._n_delta_live = int(dl.sum())
-        self._next_id = int(np.asarray(state["meta"]["next_id"]))
-        # Rebuild the host id -> location map from segment state.
-        self._loc = {}
-        if self.main is not None:
-            live = np.asarray(self.tomb.live[:self.main.n])
-            for i, e in enumerate(np.asarray(self.main.ids).tolist()):
-                if live[i]:
-                    self._loc[int(e)] = ("m", i)
-        if self.delta is not None:
             d_ids = np.asarray(self.delta.ids)
             for s in range(int(self.delta.count)):
                 if dl[s]:
                     self._loc[int(d_ids[s])] = ("d", s)
+        self._next_id = int(np.asarray(state["meta"]["next_id"]))
         return self

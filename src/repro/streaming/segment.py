@@ -1,29 +1,54 @@
-"""The immutable main segment: corpus rows + CSR tables + per-bucket HLLs.
+"""Immutable frozen segments + the multi-level LSM segment stack.
 
-A thin wrapper over the static core's ``build_tables`` fusion
-(Algorithm 1).  Rows are addressed by *internal* position (0..n-1) —
-that is the id the HLL registers are keyed on, which keeps table/shard
-merges exact — and mapped to external document ids via ``ids``.
-``bucket_ids`` is retained so deletes can update the per-bucket
-tombstone counts without re-hashing.
+A ``FrozenSegment`` is one sealed unit of the streaming index: corpus
+rows + CSR ``LSHTables`` + per-bucket HLLs (the paper's Algorithm 1
+fusion) + a tombstone bitmap.  Rows are padded to a power of two and
+pad rows are *hashed out of the bucket space* (bucket ``B``), which the
+CSR ``segment_sum`` and the HLL ``segment_max`` drop exactly — padding
+costs capacity, never correctness — so repeated freezes of the same
+delta capacity reuse one compiled build.
+
+``SegmentStack`` arranges frozen segments into LSM levels:
+
+  * level 0 holds *minor* segments sealed straight from the delta
+    (``freeze``: O(delta_capacity), no rebuild of older data);
+  * a tiered ``CompactionPolicy`` merges a level's segments into one
+    segment at the next level when the level overflows, so each row is
+    rewritten O(log n) times over its lifetime instead of once per
+    delta fill.
+
+Merges are materialized as ``MergeTask`` work items and advanced in
+bounded ``compact_step(budget_rows)`` increments: each step gathers and
+hashes at most ``budget_rows`` live rows into host staging buffers;
+the final step runs the fused ``build_tables`` over the staged rows and
+*atomically swaps* the merged segment in (queries keep being served
+from the old level list until then).  Rows deleted while staged are
+re-checked against the input tombstones at swap time, so churn during
+a merge never resurrects dead rows.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.engine import _pad_size
 from repro.core.lsh.tables import LSHTables, build_tables
+from repro.streaming import tombstones as tomb_lib
 
-__all__ = ["MainSegment", "build_main"]
+__all__ = ["MainSegment", "build_main", "FrozenSegment", "freeze_segment",
+           "MergeTask", "MergeResult", "SegmentStack"]
 
 
 @dataclasses.dataclass
 class MainSegment:
-    x: jax.Array            # (n, d) corpus rows
-    ids: jax.Array          # (n,) int32 external doc ids
-    bucket_ids: jax.Array   # (n, L) int32 per-table buckets
+    x: jax.Array            # (n, d) corpus rows (may include pad rows)
+    ids: jax.Array          # (n,) int32 external doc ids (-1 on pad rows)
+    bucket_ids: jax.Array   # (n, L) int32 per-table buckets (B on pad rows)
     tables: LSHTables
 
     @property
@@ -33,7 +58,8 @@ class MainSegment:
 
 def build_main(x: jax.Array, ext_ids: jax.Array, bucket_fn, params,
                num_buckets: int, m: int, chunk: int = 65536) -> MainSegment:
-    """Algorithm 1 on a row block: chunked hashing + fused table build."""
+    """Algorithm 1 on an exact (unpadded) row block; kept for callers
+    that manage their own padding."""
     x = jnp.asarray(x)
     n = x.shape[0]
     bids = [bucket_fn(params, x[lo:lo + chunk]) for lo in range(0, n, chunk)]
@@ -43,3 +69,266 @@ def build_main(x: jax.Array, ext_ids: jax.Array, bucket_fn, params,
     return MainSegment(x=x, ids=jnp.asarray(ext_ids, jnp.int32),
                        bucket_ids=bucket_ids.astype(jnp.int32),
                        tables=tables)
+
+
+@dataclasses.dataclass
+class FrozenSegment:
+    """One immutable level entry: padded rows + tables + tombstones."""
+
+    uid: int                # stack-unique id (stable across merges of others)
+    level: int              # LSM level (0 = freshly frozen delta)
+    seg: MainSegment        # n_pad rows; pads hashed out of bucket space
+    tomb: tomb_lib.Tombstones
+    n_rows: int             # real rows (tombstoned included, pads excluded)
+    n_live: int
+
+    @property
+    def n_pad(self) -> int:
+        return self.seg.n
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_rows - self.n_live
+
+
+def freeze_segment(x: np.ndarray, ext_ids: np.ndarray, bucket_fn, params,
+                   num_buckets: int, m: int, *, uid: int, level: int,
+                   bucket_rows: Optional[np.ndarray] = None
+                   ) -> FrozenSegment:
+    """Seal live rows into an immutable padded segment (Algorithm 1).
+
+    ``bucket_rows`` (k, L) skips re-hashing when the caller staged the
+    hashes already (budgeted merges); pad lanes always hash to bucket
+    ``num_buckets`` so the fused build drops them exactly.
+    """
+    x = np.asarray(x)
+    k = int(x.shape[0])
+    n_pad = _pad_size(max(k, 1))
+    pad_shape = (n_pad,) + tuple(x.shape[1:])
+    x_p = np.zeros(pad_shape, x.dtype)
+    x_p[:k] = x
+    ids_p = np.full((n_pad,), -1, np.int32)
+    ids_p[:k] = ext_ids
+    valid = np.zeros((n_pad,), bool)
+    valid[:k] = True
+    x_j = jnp.asarray(x_p)
+    valid_j = jnp.asarray(valid)
+    if bucket_rows is None:
+        chunk = 65536
+        if n_pad > chunk:
+            bids = jnp.concatenate(
+                [bucket_fn(params, x_j[lo:lo + chunk])
+                 for lo in range(0, n_pad, chunk)], axis=0).astype(jnp.int32)
+        else:
+            bids = bucket_fn(params, x_j).astype(jnp.int32)
+    else:
+        L = bucket_rows.shape[1] if k else 0
+        if L == 0:      # empty freeze: hash the (zero) pad rows for L
+            bids = bucket_fn(params, x_j).astype(jnp.int32)
+        else:
+            b_p = np.full((n_pad, L), num_buckets, np.int32)
+            b_p[:k] = bucket_rows
+            bids = jnp.asarray(b_p)
+    bids = jnp.where(valid_j[:, None], bids, num_buckets)
+    tables = build_tables(jnp.arange(n_pad, dtype=jnp.int32), bids,
+                          num_buckets, m)
+    live = jnp.concatenate([valid_j, jnp.zeros((1,), bool)])
+    tomb = tomb_lib.Tombstones(
+        live=live, counts=jnp.zeros((tables.L, num_buckets), jnp.int32))
+    seg = MainSegment(x=x_j, ids=jnp.asarray(ids_p),
+                      bucket_ids=bids.astype(jnp.int32), tables=tables)
+    return FrozenSegment(uid=uid, level=level, seg=seg, tomb=tomb,
+                         n_rows=k, n_live=k)
+
+
+# ---------------------------------------------------------------------------
+# Budgeted merges
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MergeTask:
+    """A scheduled levels merge with incremental staging state."""
+
+    uids: List[int]
+    target_level: int
+    reason: str
+    # staging: per chunk — source (uid, row indices), rows, ids, hashes
+    src: List[Tuple[int, np.ndarray]] = dataclasses.field(
+        default_factory=list)
+    rows: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ids: List[np.ndarray] = dataclasses.field(default_factory=list)
+    bids: List[np.ndarray] = dataclasses.field(default_factory=list)
+    input_idx: int = 0      # cursor: which input segment
+    row_off: int = 0        # cursor: next row within it
+    steps: int = 0
+    work_seconds: float = 0.0   # sum of this task's compact_step durations
+
+    @property
+    def staged_done(self) -> bool:
+        return self.input_idx >= len(self.uids)
+
+
+@dataclasses.dataclass
+class MergeResult:
+    """Outcome of a completed (swapped-in) merge."""
+
+    new: Optional[FrozenSegment]          # None when every row was dead
+    removed_uids: List[int]
+    moved: List[Tuple[int, int]]          # (ext_id, new row) pairs
+    dropped: int                          # dead rows reclaimed
+    steps: int
+    reason: str
+    seconds: float                        # accumulated step work time
+    target_level: int = 0
+
+
+class SegmentStack:
+    """The frozen half of a streaming index: level list + merge queue."""
+
+    def __init__(self) -> None:
+        self.segments: List[FrozenSegment] = []
+        self.tasks: List[MergeTask] = []     # FIFO; tasks[0] is active
+        self._next_uid = 0
+
+    # ------------------------------------------------------------- intro
+    def next_uid(self) -> int:
+        u = self._next_uid
+        self._next_uid += 1
+        return u
+
+    def add(self, seg: FrozenSegment) -> None:
+        self.segments.append(seg)
+
+    def by_uid(self, uid: int) -> FrozenSegment:
+        for s in self.segments:
+            if s.uid == uid:
+                return s
+        raise KeyError(uid)
+
+    # ------------------------------------------------------------- sizes
+    @property
+    def n_rows(self) -> int:
+        return sum(s.n_rows for s in self.segments)
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.n_live for s in self.segments)
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_rows - self.n_live
+
+    def level_counts(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for s in self.segments:
+            out[s.level] = out.get(s.level, 0) + 1
+        return out
+
+    def pending_uids(self) -> set:
+        return {u for t in self.tasks for u in t.uids}
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.tasks)
+
+    # --------------------------------------------------------- scheduling
+    def schedule(self, uids: Sequence[int], target_level: int,
+                 reason: str) -> bool:
+        """Queue a merge of ``uids`` unless any is already pending."""
+        uids = [u for u in uids]
+        if not uids or (set(uids) & self.pending_uids()):
+            return False
+        self.tasks.append(MergeTask(uids=uids, target_level=target_level,
+                                    reason=reason))
+        return True
+
+    # -------------------------------------------------------------- steps
+    def compact_step(self, budget_rows: int, bucket_fn, params,
+                     num_buckets: int, m: int) -> Optional[MergeResult]:
+        """Advance the active merge by one bounded step.
+
+        A staging step gathers + hashes at most ``budget_rows`` live
+        rows; once staging is complete the *next* step runs the fused
+        build over the staged rows and swaps the merged segment in.
+        Returns a ``MergeResult`` when a merge completed this step,
+        else None.  No-op (returns None) when nothing is queued.
+        """
+        if not self.tasks:
+            return None
+        task = self.tasks[0]
+        task.steps += 1
+        t0 = time.perf_counter()
+        res = None
+        if not task.staged_done:
+            self._stage(task, max(int(budget_rows), 1))
+        if task.staged_done:
+            # tiny merges finish in the same step when the budget
+            # covered every row — the build below is their swap
+            res = self._finalize(task, num_buckets, m, bucket_fn, params)
+        task.work_seconds += time.perf_counter() - t0
+        if res is not None:
+            res.seconds = task.work_seconds
+        return res
+
+    def _stage(self, task: MergeTask, budget: int) -> None:
+        left = budget
+        while left > 0 and not task.staged_done:
+            seg = self.by_uid(task.uids[task.input_idx])
+            if task.row_off >= seg.n_rows:
+                task.input_idx += 1
+                task.row_off = 0
+                continue
+            hi = min(seg.n_rows, task.row_off + left)
+            idx = np.arange(task.row_off, hi)
+            live = np.asarray(seg.tomb.live[task.row_off:hi])
+            idx = idx[live]
+            if len(idx):
+                task.src.append((seg.uid, idx))
+                task.rows.append(
+                    np.asarray(seg.seg.x[task.row_off:hi])[live])
+                task.ids.append(
+                    np.asarray(seg.seg.ids[task.row_off:hi])[live])
+                # rows keep the hashes they froze with (params are
+                # immutable), so merges never re-hash — the budget
+                # bounds a pure gather
+                task.bids.append(np.asarray(
+                    seg.seg.bucket_ids[task.row_off:hi])[live]
+                    .astype(np.int32))
+            left -= hi - task.row_off
+            task.row_off = hi
+
+    def _finalize(self, task: MergeTask, num_buckets: int, m: int,
+                  bucket_fn, params) -> MergeResult:
+        # Re-check staged rows against the *current* tombstones: deletes
+        # that landed mid-merge must not resurrect at swap time.
+        keep_x, keep_ids, keep_bids = [], [], []
+        for (uid, idx), rows, ids, bids in zip(task.src, task.rows,
+                                               task.ids, task.bids):
+            seg = self.by_uid(uid)
+            live = np.asarray(seg.tomb.live)[idx]
+            if live.any():
+                keep_x.append(rows[live])
+                keep_ids.append(ids[live])
+                keep_bids.append(bids[live])
+        total_in = sum(s.n_rows for s in self.segments
+                       if s.uid in task.uids)
+        self.tasks.pop(0)
+        removed = [u for u in task.uids]
+        self.segments = [s for s in self.segments if s.uid not in removed]
+        if not keep_x:
+            return MergeResult(new=None, removed_uids=removed, moved=[],
+                               dropped=total_in, steps=task.steps,
+                               reason=task.reason,
+                               seconds=task.work_seconds,
+                               target_level=task.target_level)
+        x = np.concatenate(keep_x, axis=0)
+        ids = np.concatenate(keep_ids, axis=0)
+        bids = np.concatenate(keep_bids, axis=0)
+        new = freeze_segment(x, ids, bucket_fn, params, num_buckets, m,
+                             uid=self.next_uid(), level=task.target_level,
+                             bucket_rows=bids)
+        self.add(new)
+        moved = [(int(e), i) for i, e in enumerate(ids.tolist())]
+        return MergeResult(new=new, removed_uids=removed, moved=moved,
+                           dropped=total_in - len(ids), steps=task.steps,
+                           reason=task.reason, seconds=task.work_seconds,
+                           target_level=task.target_level)

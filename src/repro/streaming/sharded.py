@@ -1,39 +1,44 @@
 """ShardedDynamicHybridIndex — the streaming index over the mesh.
 
-The fourth scenario the segment engine enables: every shard of the
-``data`` axis owns a full dynamic-index worth of segment state —
+Every shard of the ``data`` axis owns a full level-stack worth of
+segment state:
 
-  * main   — per-shard CSR tables + HLLs built by the ``build_tables``
-             fusion over a *padded* row block.  Pad rows are hashed to
-             bucket ``B`` (one past the bucket space), which the CSR
+  * levels — a list of frozen segments shared *structurally* across
+             shards: every shard holds its own rows for level entry k,
+             padded to one common ``n_pad`` so the whole level is a
+             stack of sharded leaves.  Pad rows are hashed to bucket
+             ``B`` (one past the bucket space), which the CSR
              ``segment_sum`` and the HLL ``segment_max`` drop exactly:
              padding costs capacity, never correctness.  HLLs are keyed
-             on globally-unique internal ids (shard * n_pad + row), so
-             a ``pmax`` of merged registers is the exact distinct-union
-             sketch across shards — the paper's per-table merge,
-             extended over the mesh.
-  * tomb   — per-shard live bitmap + per-(table, bucket) dead counts
-             (the engine's tombstone correction terms).
+             on per-level globally-unique internal ids
+             (shard * n_pad + row), so a ``pmax`` of merged registers
+             per level is the exact distinct-union sketch across
+             shards; levels are disjoint document sets, so their
+             estimates sum — the engine's N-segment combination.
+  * tomb   — per-(shard, level) live bitmap + per-(table, bucket) dead
+             counts (the engine's tombstone correction terms).
   * delta  — per-shard fixed-capacity delta segment; inserts/deletes
              are the same fused ``.at[]`` scatters as the single-host
              index, applied under ``shard_map``.
 
-Queries run one ``shard_map``: each shard builds its engine segments
-(``TableSegment`` + ``DeltaView``), merges ``SegmentEstimate`` terms
-across shards (``psum`` collisions/dead/exact, ``pmax`` registers),
-finalizes global and local routes via the shared ``finalize_route``,
-and picks a strategy per the routing policy:
+When the deltas fill, every shard's live delta rows freeze in place
+into one new level-0 entry (no cross-shard movement, no rehash — the
+delta carries its hashes).  A tiered ``CompactionPolicy`` merges a
+level's entries into the next level; merges are staged in bounded
+``compact_step(budget_rows)`` increments (host gather of at most
+``budget_rows`` rows per step across shards) and the merged level
+swaps in atomically — queries keep being served from the old level
+list until then.
 
-  * ``"global"``    — one decision from the mesh-wide Eq.(1)/(2) costs;
-  * ``"per_shard"`` — each shard compares its local costs: the shard
-    holding a dense cluster scans linearly while the others use LSH
-    (query-adaptive parameter choice generalized to local density skew).
-
-Compaction folds each shard's live main + delta rows into a fresh
-padded main segment — per shard, through the same ``build_tables``
-fusion, with no cross-shard row movement.  Reported ids are external;
-after any churn the reported sets match a fresh single-host
-``DynamicHybridIndex.build()`` on the surviving corpus per route.
+Queries run one ``shard_map`` per level structure: each shard builds
+its engine segments (one ``TableSegment`` per level + ``DeltaView``),
+merges ``SegmentEstimate`` terms across shards (``psum`` exact terms,
+``pmax`` registers, per level), finalizes global and local routes via
+the shared ``finalize_route``, and picks a strategy per the routing
+policy (``"global"`` or the density-adaptive ``"per_shard"``).
+Reported ids are external; after any churn — including mid-merge —
+the reported sets match a fresh single-host build on the surviving
+corpus per route.
 """
 from __future__ import annotations
 
@@ -57,6 +62,9 @@ from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
 
 __all__ = ["ShardedDynamicHybridIndex", "ShardedQueryResult"]
+
+_LEAVES = ("x", "ids", "bucket_ids", "perm", "starts", "registers",
+           "live", "tomb_counts")
 
 
 @dataclasses.dataclass
@@ -93,6 +101,54 @@ class ShardedQueryResult:
         return round(self.n_queries * self.frac_linear)
 
 
+@dataclasses.dataclass
+class _ShardLevel:
+    """One level entry: sharded leaves + host-side accounting."""
+
+    uid: int
+    level: int
+    n_pad: int                      # per-shard padded rows
+    leaves: Dict[str, jax.Array]    # _LEAVES, leading dim = shard axis
+    rows_s: np.ndarray              # (S,) real rows (tombstoned included)
+    live_s: np.ndarray              # (S,)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows_s.sum())
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live_s.sum())
+
+
+@dataclasses.dataclass
+class _ShardMergeTask:
+    """A scheduled levels merge with per-(uid, shard) staging state."""
+
+    uids: List[int]
+    target_level: int
+    reason: str
+    shards: int
+    # staging chunks: (uid, shard, row indices), rows, ids, hashes
+    src: List[Tuple[int, int, np.ndarray]] = dataclasses.field(
+        default_factory=list)
+    rows: List[np.ndarray] = dataclasses.field(default_factory=list)
+    ids: List[np.ndarray] = dataclasses.field(default_factory=list)
+    bids: List[np.ndarray] = dataclasses.field(default_factory=list)
+    pair_idx: int = 0       # cursor over (uid, shard) pairs
+    row_off: int = 0
+    steps: int = 0
+    work_seconds: float = 0.0   # sum of this task's compact_step durations
+
+    @property
+    def pairs(self) -> List[Tuple[int, int]]:
+        return [(u, s) for u in self.uids for s in range(self.shards)]
+
+    @property
+    def staged_done(self) -> bool:
+        return self.pair_idx >= len(self.uids) * self.shards
+
+
 class ShardedDynamicHybridIndex:
     """Streaming Hybrid LSH index, row-sharded over a mesh axis."""
 
@@ -124,20 +180,19 @@ class ShardedDynamicHybridIndex:
         self._shard = NamedSharding(mesh, P(data_axis))
         self.stats = CompactionStats()
 
-        # device leaves (leading dim = shard axis); None until first use
-        self._main = None     # dict: x, ids, bucket_ids, perm, starts,
-        #                       registers, live, tomb_counts
+        # device state; delta None until first use
+        self._levels: List[_ShardLevel] = []
         self._delta = None    # dict: x, bucket_ids, ids, live, count
-        self._n_pad = 0       # per-shard main capacity (rows incl. pads)
+        self._tasks: List[_ShardMergeTask] = []
+        self._next_uid = 0
         self._d = None        # row width
         self._dtype = None
 
         # host bookkeeping
-        self._loc: Dict[int, tuple] = {}   # ext -> (shard, "m"|"d", pos)
+        self._loc: Dict[int, tuple] = {}   # ext -> (shard, "m", uid, row)
+        #                                         | (shard, "d", slot)
         self._next_id = 0
         S = self.shards
-        self._main_rows_s = np.zeros(S, np.int64)   # real rows (incl. dead)
-        self._main_live_s = np.zeros(S, np.int64)
         self._delta_count_s = np.zeros(S, np.int64)
         self._delta_live_s = np.zeros(S, np.int64)
         self._inserts = 0
@@ -147,11 +202,21 @@ class ShardedDynamicHybridIndex:
     # ------------------------------------------------------------- sizes
     @property
     def n(self) -> int:
-        return int(self._main_live_s.sum() + self._delta_live_s.sum())
+        return (sum(l.n_live for l in self._levels)
+                + int(self._delta_live_s.sum()))
+
+    @property
+    def n_frozen_rows(self) -> int:
+        return sum(l.n_rows for l in self._levels)
 
     @property
     def n_dead(self) -> int:
-        return int(self._main_rows_s.sum() - self._main_live_s.sum())
+        return sum(l.n_rows - l.n_live for l in self._levels)
+
+    def _next_uid_(self) -> int:
+        u = self._next_uid
+        self._next_uid += 1
+        return u
 
     # ------------------------------------------------------------- build
     def build(self, x: jax.Array,
@@ -167,42 +232,71 @@ class ShardedDynamicHybridIndex:
             assert len(set(ids.tolist())) == len(ids), "duplicate ids"
         self._d, self._dtype = int(x.shape[1]), x.dtype
         S = self.shards
-        parts = [(x[s::S], ids[s::S]) for s in range(S)]
-        self._set_main(parts)
+        self._levels = []
+        self._tasks = []
+        self._loc = {}
+        if n:
+            parts = [(x[s::S], ids[s::S]) for s in range(S)]
+            self._make_level(parts, self.policy.level_for(
+                n, self.delta_capacity))
         self._reset_delta()
         self._next_id = int(ids.max()) + 1 if n else 0
         return self
 
-    def _set_main(self, parts: List[Tuple[np.ndarray, np.ndarray]]) -> None:
-        """Per-shard (rows, ext_ids) -> padded sharded main segment."""
-        S = self.shards
+    def _make_level(self, parts: List[tuple], level: int) -> _ShardLevel:
+        """Per-shard (rows, ext_ids[, bucket_rows]) -> one padded level.
+
+        With ``bucket_rows`` supplied (freezes and merges) the fused
+        build skips re-hashing and runs straight from the staged hashes.
+        """
+        S, L, B = self.shards, self.family.L, self.num_buckets
         ks = [int(p[0].shape[0]) for p in parts]
         n_pad = _pad_size(max(max(ks), 1))
         xs = np.zeros((S, n_pad, self._d), self._dtype)
         ext = np.full((S, n_pad), -1, np.int32)
         valid = np.zeros((S, n_pad), bool)
-        self._loc = {e: loc for e, loc in self._loc.items()
-                     if loc[1] == "d"}  # main locations are re-derived
-        for s, (rows, eids) in enumerate(parts):
+        with_bids = len(parts[0]) == 3
+        bids_p = np.full((S, n_pad, L), B, np.int32) if with_bids else None
+        for s, p in enumerate(parts):
             k = ks[s]
-            xs[s, :k] = rows
-            ext[s, :k] = eids
+            xs[s, :k] = p[0]
+            ext[s, :k] = p[1]
             valid[s, :k] = True
-            for i, e in enumerate(eids.tolist()):
-                self._loc[int(e)] = (s, "m", i)
-        self._n_pad = n_pad
-        self._main_rows_s = np.asarray(ks, np.int64)
-        self._main_live_s = np.asarray(ks, np.int64)
+            if with_bids and k:
+                bids_p[s, :k] = p[2]
         put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
-        bids, perm, starts, regs = self._build_fn(n_pad)(
-            put(xs), put(valid), self.params)
+        if with_bids:
+            bids = put(bids_p)
+            perm, starts, regs = self._build_from_bids_fn(n_pad)(
+                bids, put(valid))
+        else:
+            bids, perm, starts, regs = self._build_fn(n_pad)(
+                put(xs), put(valid), self.params)
         live = np.concatenate([valid, np.zeros((S, 1), bool)], axis=1)
-        self._main = {
-            "x": put(xs), "ids": put(ext), "bucket_ids": bids,
-            "perm": perm, "starts": starts, "registers": regs,
-            "live": put(live),
-            "tomb_counts": put(np.zeros(
-                (S, self.family.L, self.num_buckets), np.int32))}
+        lvl = _ShardLevel(
+            uid=self._next_uid_(), level=int(level), n_pad=n_pad,
+            leaves={"x": put(xs), "ids": put(ext), "bucket_ids": bids,
+                    "perm": perm, "starts": starts, "registers": regs,
+                    "live": put(live),
+                    "tomb_counts": put(np.zeros((S, L, B), np.int32))},
+            rows_s=np.asarray(ks, np.int64),
+            live_s=np.asarray(ks, np.int64))
+        self._levels.append(lvl)
+        for s, p in enumerate(parts):
+            for i, e in enumerate(np.asarray(p[1]).tolist()):
+                self._loc[int(e)] = (s, "m", lvl.uid, i)
+        self._evict_stale_query_fns()
+        return lvl
+
+    def _evict_stale_query_fns(self) -> None:
+        """Drop query fns compiled for level structures that no longer
+        exist.  The query fn is specialized per tuple of level pad
+        sizes; under streaming that tuple changes on every freeze/merge,
+        so without eviction a long-running index accumulates one
+        compiled executable per structure ever seen."""
+        cur = tuple(l.n_pad for l in self._levels)
+        self._fn_cache = {k: v for k, v in self._fn_cache.items()
+                          if k[0] != "query" or k[1] == cur}
 
     def _build_fn(self, n_pad: int):
         """shard_map'd Algorithm 1 fusion over one padded row block."""
@@ -232,6 +326,30 @@ class ShardedDynamicHybridIndex:
         self._fn_cache[key] = fn
         return fn
 
+    def _build_from_bids_fn(self, n_pad: int):
+        """Same fusion, from staged hashes (freeze/merge path)."""
+        key = ("build_bids", n_pad)
+        if key in self._fn_cache:
+            return self._fn_cache[key]
+        B, m = self.num_buckets, self.m
+        axis = self.data_axis
+
+        def _build(bids, valid):
+            bids, valid = bids[0], valid[0]
+            shard = jax.lax.axis_index(axis)
+            bids = jnp.where(valid[:, None], bids.astype(jnp.int32), B)
+            gids = shard * n_pad + jnp.arange(n_pad, dtype=jnp.int32)
+            t = build_tables(gids, bids, B, m)
+            perm = t.perm - shard * n_pad
+            return perm[None], t.starts[None], t.registers[None]
+
+        sh = P(axis)
+        fn = jax.jit(shard_map(
+            _build, mesh=self.mesh, in_specs=(sh, sh),
+            out_specs=(sh, sh, sh), check_rep=False))
+        self._fn_cache[key] = fn
+        return fn
+
     def _reset_delta(self) -> None:
         S, C, L = self.shards, self.delta_capacity, self.family.L
         put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
@@ -243,26 +361,13 @@ class ShardedDynamicHybridIndex:
             "count": put(np.zeros((S,), np.int32))}
         self._delta_count_s[:] = 0
         self._delta_live_s[:] = 0
-        self._loc = {e: loc for e, loc in self._loc.items()
-                     if loc[1] == "m"}
 
     def _ensure_init(self, rows: np.ndarray) -> None:
-        """First contact without build(): empty main, delta-only shards."""
+        """First contact without build(): no levels, delta-only shards."""
         if self._delta is not None:
             return
         self._d, self._dtype = int(rows.shape[1]), rows.dtype
-        S, L, B, m = (self.shards, self.family.L, self.num_buckets, self.m)
-        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
-        self._n_pad = 0
-        self._main = {
-            "x": put(np.zeros((S, 0, self._d), self._dtype)),
-            "ids": put(np.zeros((S, 0), np.int32)),
-            "bucket_ids": put(np.zeros((S, 0, L), np.int32)),
-            "perm": put(np.zeros((S, L, 0), np.int32)),
-            "starts": put(np.zeros((S, L, B + 1), np.int32)),
-            "registers": put(np.zeros((S, L, B, m), np.uint8)),
-            "live": put(np.zeros((S, 1), bool)),
-            "tomb_counts": put(np.zeros((S, L, B), np.int32))}
+        self._levels = []
         self._reset_delta()
 
     # ------------------------------------------------------------ insert
@@ -270,8 +375,8 @@ class ShardedDynamicHybridIndex:
                ids: Optional[Sequence[int]] = None) -> np.ndarray:
         """Append documents to the least-loaded shard deltas.
 
-        Splits the batch by remaining per-shard delta capacity,
-        compacting between chunks when every delta fills.
+        Splits the batch by remaining per-shard delta capacity, freezing
+        every shard's delta into a new level-0 entry when all fill.
         """
         rows = np.asarray(rows)
         if rows.shape[0] == 0:
@@ -291,7 +396,7 @@ class ShardedDynamicHybridIndex:
         while lo < rows.shape[0]:
             free = self.delta_capacity - self._delta_count_s
             if free.sum() == 0:
-                self.compact(reason="delta_full")
+                self._freeze("delta_full")
                 free = self.delta_capacity - self._delta_count_s
             take = int(min(free.sum(), rows.shape[0] - lo))
             # round-robin water-fill over shards with free slots
@@ -362,7 +467,7 @@ class ShardedDynamicHybridIndex:
     def delete(self, ids: Iterable[int], strict: bool = False) -> int:
         """Tombstone documents by external id; returns #removed."""
         S = self.shards
-        main_rows: List[List[int]] = [[] for _ in range(S)]
+        by_uid: Dict[int, List[List[int]]] = {}
         delta_slots: List[List[int]] = [[] for _ in range(S)]
         for e in ids:
             loc = self._loc.pop(int(e), None)
@@ -370,22 +475,27 @@ class ShardedDynamicHybridIndex:
                 if strict:
                     raise KeyError(e)
                 continue
-            s, kind, pos = loc
-            (main_rows[s] if kind == "m" else delta_slots[s]).append(pos)
+            s, kind = loc[0], loc[1]
+            if kind == "d":
+                delta_slots[s].append(loc[2])
+            else:
+                by_uid.setdefault(loc[2],
+                                  [[] for _ in range(S)])[s].append(loc[3])
         removed = 0
-        if any(main_rows):
+        for uid, main_rows in by_uid.items():
+            lvl = self._level_by_uid(uid)
             pk = _pad_size(max(max(len(a) for a in main_rows), 1))
             rows_p = np.zeros((S, pk), np.int32)
             valid = np.zeros((S, pk), bool)
             for s, rr in enumerate(main_rows):
                 rows_p[s, :len(rr)] = rr
                 valid[s, :len(rr)] = True
-                self._main_live_s[s] -= len(rr)
+                lvl.live_s[s] -= len(rr)
                 removed += len(rr)
             live, counts = self._delete_main_fn(pk)(
-                (self._main["live"], self._main["tomb_counts"],
-                 self._main["bucket_ids"]), rows_p, valid)
-            self._main = {**self._main, "live": live, "tomb_counts": counts}
+                (lvl.leaves["live"], lvl.leaves["tomb_counts"],
+                 lvl.leaves["bucket_ids"]), rows_p, valid)
+            lvl.leaves = {**lvl.leaves, "live": live, "tomb_counts": counts}
         if any(delta_slots):
             pk = _pad_size(max(max(len(a) for a in delta_slots), 1))
             slots_p = np.zeros((S, pk), np.int32)
@@ -403,6 +513,12 @@ class ShardedDynamicHybridIndex:
         self._deletes += removed
         self._maybe_compact()
         return removed
+
+    def _level_by_uid(self, uid: int) -> _ShardLevel:
+        for l in self._levels:
+            if l.uid == uid:
+                return l
+        raise KeyError(uid)
 
     def _delete_main_fn(self, pk: int):
         key = ("del_main", pk)
@@ -442,42 +558,192 @@ class ShardedDynamicHybridIndex:
         return fn
 
     # --------------------------------------------------------- compaction
+    def _freeze(self, reason: str) -> None:
+        """Seal every shard's live delta rows into one level-0 entry.
+
+        Rows stay on their shard; the delta already carries its hashes,
+        so the freeze is one fused from-hashes build over at most
+        delta_capacity rows per shard.
+        """
+        if self._delta is None or self._delta_count_s.sum() == 0:
+            return
+        C = self.delta_capacity
+        dx = np.asarray(self._delta["x"])[:, :C]
+        dids = np.asarray(self._delta["ids"])[:, :C]
+        dbids = np.asarray(self._delta["bucket_ids"])[:, :C]
+        dlive = np.asarray(self._delta["live"])[:, :C]
+        parts = []
+        total = 0
+        for s in range(self.shards):
+            live = dlive[s]
+            parts.append((dx[s][live], dids[s][live].astype(np.int64),
+                          dbids[s][live]))
+            total += int(live.sum())
+        self._reset_delta()
+        if total == 0:
+            return
+        self._make_level(parts, level=0)
+        self.stats.record_freeze(total)
+
     def _maybe_compact(self) -> None:
-        reason = self.policy.reason(
-            delta_count=int(self._delta_count_s.max()) if self._delta is not
-            None else 0,
-            delta_capacity=self.delta_capacity,
-            n_main=int(self._main_rows_s.sum()),
-            n_dead=self.n_dead)
-        if reason:
-            self.compact(reason=reason)
+        if self._delta is not None:
+            r = self.policy.freeze_reason(
+                delta_count=int(self._delta_count_s.max()),
+                delta_capacity=self.delta_capacity)
+            if r:
+                self._freeze(r)
+        self._schedule_merges()
+        if self.policy.step_rows is None:
+            self._drain()
+
+    def _pending_uids(self) -> set:
+        return {u for t in self._tasks for u in t.uids}
+
+    def _schedule_merges(self) -> None:
+        if not self._levels:
+            return
+        pend = self._pending_uids()
+        free = [l for l in self._levels if l.uid not in pend]
+        counts: Dict[int, int] = {}
+        for l in free:
+            counts[l.level] = counts.get(l.level, 0) + 1
+        for reason, src, target in self.policy.plan_merges(
+                level_counts=counts, n_rows=self.n_frozen_rows,
+                n_dead=self.n_dead,
+                n_live=sum(l.n_live for l in self._levels),
+                unit=self.delta_capacity, can_full=not pend):
+            uids = [l.uid for l in free if src is None or l.level == src]
+            if uids:
+                self._tasks.append(_ShardMergeTask(
+                    uids=uids, target_level=target,
+                    reason=reason, shards=self.shards))
+
+    @property
+    def has_compaction_work(self) -> bool:
+        return bool(self._tasks)
+
+    def compact_step(self, budget_rows: Optional[int] = None) -> bool:
+        """Advance the active merge by one bounded step (gather + hash of
+        at most ``budget_rows`` rows across shards, or — once staging is
+        complete — the fused build + atomic level swap).  Returns True
+        while more work remains."""
+        if not self._tasks:
+            return False
+        budget = int(budget_rows or self.policy.step_rows
+                     or max(self.delta_capacity, 1))
+        task = self._tasks[0]
+        task.steps += 1
+        self.stats.record_step()
+        t0 = time.perf_counter()
+        if not task.staged_done:
+            self._stage(task, budget)
+            if not task.staged_done:
+                task.work_seconds += time.perf_counter() - t0
+                return True
+        total, dropped = self._finalize_merge(task)
+        task.work_seconds += time.perf_counter() - t0
+        self.stats.record_merge(task.target_level, total, task.steps,
+                                task.work_seconds, dropped,
+                                reason=task.reason)
+        self._schedule_merges()       # cascade up the levels
+        return bool(self._tasks)
+
+    def _stage(self, task: _ShardMergeTask, budget: int) -> None:
+        pairs = task.pairs
+        left = max(budget, 1)
+        while left > 0 and not task.staged_done:
+            uid, s = pairs[task.pair_idx]
+            lvl = self._level_by_uid(uid)
+            n_rows = int(lvl.rows_s[s])
+            if task.row_off >= n_rows:
+                task.pair_idx += 1
+                task.row_off = 0
+                continue
+            hi = min(n_rows, task.row_off + left)
+            idx = np.arange(task.row_off, hi)
+            live = np.asarray(lvl.leaves["live"][s, task.row_off:hi])
+            idx = idx[live]
+            if len(idx):
+                task.src.append((uid, s, idx))
+                task.rows.append(np.asarray(
+                    lvl.leaves["x"][s, task.row_off:hi])[live])
+                task.ids.append(np.asarray(
+                    lvl.leaves["ids"][s, task.row_off:hi])[live])
+                task.bids.append(np.asarray(
+                    lvl.leaves["bucket_ids"][s, task.row_off:hi])[live])
+            left -= hi - task.row_off
+            task.row_off = hi
+
+    def _finalize_merge(self, task: _ShardMergeTask) -> Tuple[int, int]:
+        S = self.shards
+        keep: List[List[tuple]] = [[] for _ in range(S)]
+        for (uid, s, idx), rows, ids, bids in zip(task.src, task.rows,
+                                                  task.ids, task.bids):
+            # deletes that landed mid-merge must not resurrect: re-check
+            # staged rows against the *current* live bitmap at swap time
+            live = np.asarray(self._level_by_uid(uid).leaves["live"][s])[idx]
+            if live.any():
+                keep[s].append((rows[live], ids[live], bids[live]))
+        total_in = sum(self._level_by_uid(u).n_rows for u in task.uids)
+        self._tasks.pop(0)
+        self._levels = [l for l in self._levels if l.uid not in task.uids]
+        parts, total = [], 0
+        for s in range(S):
+            if keep[s]:
+                xs = np.concatenate([c[0] for c in keep[s]], axis=0)
+                es = np.concatenate([c[1] for c in keep[s]]).astype(np.int64)
+                bs = np.concatenate([c[2] for c in keep[s]], axis=0)
+            else:
+                xs = np.zeros((0, self._d), self._dtype)
+                es = np.zeros((0,), np.int64)
+                bs = np.zeros((0, self.family.L), np.int32)
+            parts.append((xs, es, bs))
+            total += len(es)
+        if total:
+            self._make_level(parts, level=task.target_level)
+        else:
+            self._evict_stale_query_fns()
+        return total, total_in - total
+
+    def _drain(self) -> None:
+        while self._tasks:
+            self.compact_step(budget_rows=max(self.n_frozen_rows, 1))
 
     def compact(self, reason: str = "manual") -> None:
-        """Fold each shard's delta + drop its tombstones, in place.
-
-        Per-shard: live rows stay on their shard and go through the
-        ``build_tables`` fusion again — no cross-shard movement.
-        """
+        """Blocking full compaction: fold every level + the delta into
+        one level per shard (drops tombstones).  Pending merge staging
+        is discarded, not drained — the fold re-gathers everything, so
+        finishing a partial merge first would build a level the fold
+        immediately throws away."""
         t0 = time.perf_counter()
         if self._delta is None:
             return
+        self._tasks = []
         dropped = self.n_dead + int(
             (self._delta_count_s - self._delta_live_s).sum())
-        m, d = self._main, self._delta
-        mx = np.asarray(m["x"])
-        mids = np.asarray(m["ids"])
-        mlive = np.asarray(m["live"])[:, :self._n_pad]
-        dx = np.asarray(d["x"])[:, :self.delta_capacity]
-        dids = np.asarray(d["ids"])[:, :self.delta_capacity]
-        dlive = np.asarray(d["live"])[:, :self.delta_capacity]
-        parts = []
-        for s in range(self.shards):
-            xs = np.concatenate([mx[s][mlive[s]], dx[s][dlive[s]]], axis=0)
-            es = np.concatenate([mids[s][mlive[s]].astype(np.int64),
-                                 dids[s][dlive[s]].astype(np.int64)])
-            parts.append((xs, es))
-        self._set_main(parts)
+        S, C = self.shards, self.delta_capacity
+        dx = np.asarray(self._delta["x"])[:, :C]
+        dids = np.asarray(self._delta["ids"])[:, :C]
+        dbids = np.asarray(self._delta["bucket_ids"])[:, :C]
+        dlive = np.asarray(self._delta["live"])[:, :C]
+        parts, total = [], 0
+        for s in range(S):
+            xs, es, bs = [dx[s][dlive[s]]], \
+                [dids[s][dlive[s]].astype(np.int64)], [dbids[s][dlive[s]]]
+            for lvl in self._levels:
+                live = np.asarray(lvl.leaves["live"][s, :lvl.n_pad])
+                xs.append(np.asarray(lvl.leaves["x"][s])[live])
+                es.append(np.asarray(
+                    lvl.leaves["ids"][s])[live].astype(np.int64))
+                bs.append(np.asarray(lvl.leaves["bucket_ids"][s])[live])
+            x = np.concatenate(xs, axis=0)
+            parts.append((x, np.concatenate(es), np.concatenate(bs, axis=0)))
+            total += x.shape[0]
+        self._levels = []
         self._reset_delta()
+        if total:
+            self._make_level(parts, self.policy.level_for(
+                total, self.delta_capacity))
         self.stats.record(reason, t0, dropped)
 
     # ------------------------------------------------------------- query
@@ -486,10 +752,12 @@ class ShardedDynamicHybridIndex:
         """Hybrid r-NN reporting, union over shards; ids are external."""
         assert self._delta is not None, "index is empty: build/insert first"
         queries = jnp.asarray(queries)
-        m, d = self._main, self._delta
-        out = self._query_fn(self._n_pad, force)(
-            (m["x"], m["ids"], m["perm"], m["starts"], m["registers"],
-             m["live"], m["tomb_counts"]),
+        d = self._delta
+        n_pads = tuple(l.n_pad for l in self._levels)
+        level_leaves = tuple(
+            tuple(l.leaves[k] for k in _LEAVES) for l in self._levels)
+        out = self._query_fn(n_pads, force)(
+            level_leaves,
             (d["x"], d["bucket_ids"], d["ids"], d["live"], d["count"]),
             self.params, queries, jnp.float32(r))
         ids, dists, mask, coll, cand, used = (np.asarray(o) for o in out)
@@ -498,8 +766,8 @@ class ShardedDynamicHybridIndex:
                                   used_lsh=used,
                                   n_queries=int(queries.shape[0]))
 
-    def _query_fn(self, n_pad: int, force: Optional[str]):
-        key = ("query", n_pad, force)
+    def _query_fn(self, n_pads: Tuple[int, ...], force: Optional[str]):
+        key = ("query", n_pads, force)
         if key in self._fn_cache:
             return self._fn_cache[key]
         family, cm, B = self.family, self.cost_model, self.num_buckets
@@ -507,53 +775,55 @@ class ShardedDynamicHybridIndex:
         cap, C = self.cap, self.delta_capacity
         # both cond branches must agree on the output width, and top_k
         # cannot widen a buffer: clamp by the narrower strategy's width
-        max_out = min(self.max_out, n_pad + C + 1,
-                      family.L * cap + C + 1)
+        max_out = min(self.max_out, sum(n_pads) + C + 1,
+                      len(n_pads) * family.L * cap + C + 1)
         routing, axis = self.routing, self.data_axis
         engine = self._engine
 
-        def _query(main_leaves, delta_leaves, params, queries, r):
-            (mx, mids, perm, starts, regs, live, tcounts) = (
-                l[0] for l in main_leaves)
+        def _query(level_leaves, delta_leaves, params, queries, r):
             delta = delta_lib.DeltaSegment(*(l[0] for l in delta_leaves))
             qb = family.bucket_ids(params, queries, B)
 
             dview = delta_lib.DeltaView(delta, metric)
             d_est = dview.estimate_terms(qb)
             n_live_local = jnp.sum(delta.live, dtype=jnp.int32)
-            n_scan_local = delta.count + n_pad
-            segments, local_terms = [dview], [d_est]
-            coll_local = d_est.collisions
-            if n_pad > 0:
-                tables = LSHTables(perm, starts, regs)
+            n_scan_local = delta.count + sum(n_pads)
+            segments, local_terms, global_terms = [], [], []
+            for leaves, n_pad in zip(level_leaves, n_pads):
+                (mx, mids, _bids, perm, starts, regs, live,
+                 tcounts) = (l[0] for l in leaves)
                 main = TableSegment(
-                    tables=tables, x=mx, metric=metric, cap=cap,
-                    live=live, tomb_counts=tcounts, ext_ids=mids,
+                    tables=LSHTables(perm, starts, regs), x=mx,
+                    metric=metric, cap=cap, live=live,
+                    tomb_counts=tcounts, ext_ids=mids,
                     q_chunk=queries.shape[0])
                 m_est = main.estimate_terms(qb)
                 merged_local = hll_lib.merge_registers(
                     m_est.registers.astype(jnp.int32), axis=1)   # (Q, m)
-                local_terms = [dataclasses.replace(
+                local_terms.append(dataclasses.replace(
                     m_est, registers=None,
-                    merged_registers=merged_local), d_est]
-                segments = [main, dview]
-                coll_local = coll_local + m_est.collisions
+                    merged_registers=merged_local))
+                # cross-shard merge, per level: psum exact terms, pmax
+                # the HLL registers (each level's internal ids are
+                # globally unique, and levels are disjoint doc sets, so
+                # pmax-per-level + sum-across-levels is exact).
+                global_terms.append(SegmentEstimate(
+                    collisions=jax.lax.psum(m_est.collisions, axis),
+                    dead_collisions=jax.lax.psum(m_est.dead_collisions,
+                                                 axis),
+                    merged_registers=jax.lax.pmax(merged_local, axis)))
+                segments.append(main)
                 n_live_local = n_live_local + jnp.sum(live,
                                                       dtype=jnp.int32)
-
-            # cross-shard SegmentEstimate merge: psum exact terms, pmax
-            # the HLL registers (distinct union across disjoint shards).
-            merged = SegmentEstimate(
-                collisions=jax.lax.psum(coll_local, axis),
-                dead_collisions=(jax.lax.psum(m_est.dead_collisions, axis)
-                                 if n_pad > 0 else None),
-                merged_registers=(jax.lax.pmax(merged_local, axis)
-                                  if n_pad > 0 else None),
+            segments.append(dview)
+            local_terms.append(d_est)
+            global_terms.append(SegmentEstimate(
+                collisions=jax.lax.psum(d_est.collisions, axis),
                 cand_exact=jax.lax.psum(
-                    d_est.cand_exact.astype(jnp.float32), axis))
+                    d_est.cand_exact.astype(jnp.float32), axis)))
             n_live_g = jax.lax.psum(n_live_local, axis)
             n_scan_g = jax.lax.psum(n_scan_local, axis)
-            route_g = finalize_route([merged], cm, n_live=n_live_g,
+            route_g = finalize_route(global_terms, cm, n_live=n_live_g,
                                      n_scan=n_scan_g)
             route_l = finalize_route(local_terms, cm, n_live=n_live_local,
                                      n_scan=n_scan_local)
@@ -581,23 +851,34 @@ class ShardedDynamicHybridIndex:
         sh, rep = P(axis), P()
         fn = jax.jit(shard_map(
             _query, mesh=self.mesh,
-            in_specs=((sh,) * 7, (sh,) * 5, rep, rep, rep),
+            in_specs=(tuple((sh,) * len(_LEAVES) for _ in n_pads),
+                      (sh,) * 5, rep, rep, rep),
             out_specs=(sh, sh, sh, rep, rep, sh), check_rep=False))
         self._fn_cache[key] = fn
         return fn
 
     # ------------------------------------------------------ observability
     def index_stats(self) -> Dict[str, object]:
+        S = self.shards
+        live_per_shard = np.zeros(S, np.int64)
+        for l in self._levels:
+            live_per_shard += l.live_s
+        levels: Dict[int, int] = {}
+        for l in self._levels:
+            levels[l.level] = levels.get(l.level, 0) + 1
         out = {
             "n_live": self.n,
-            "n_main": int(self._main_rows_s.sum()),
+            "n_main": self.n_frozen_rows,
             "n_main_dead": self.n_dead,
             "delta_count": int(self._delta_count_s.sum()),
             "delta_live": int(self._delta_live_s.sum()),
             "delta_capacity": self.delta_capacity,
-            "shards": self.shards,
-            "n_pad_per_shard": self._n_pad,
-            "live_per_shard": self._main_live_s.tolist(),
+            "shards": S,
+            "segments": len(self._levels),
+            "levels": levels,
+            "level_n_pads": [l.n_pad for l in self._levels],
+            "pending_merges": len(self._tasks),
+            "live_per_shard": live_per_shard.tolist(),
             "delta_per_shard": self._delta_count_s.tolist(),
             "routing": self.routing,
             "inserts": self._inserts,
@@ -608,26 +889,28 @@ class ShardedDynamicHybridIndex:
 
     # -------------------------------------------------------- checkpoint
     def state_dict(self) -> Dict[str, Dict[str, np.ndarray]]:
-        """Sharded segment leaves as a flat-array pytree.
+        """Sharded level-stack leaves as a nested flat-array pytree.
 
         Leaves keep their leading shard axis; restore re-places them on
         the current mesh (same shard count) with ``device_put``.  The
-        tree structure is state-independent so a fresh index serves as
-        the restore template.
+        level list varies, so restore goes through the manifest-driven
+        ``CheckpointManager.restore_index`` (no template).  Staged merge
+        progress is volatile — inputs are still complete levels, so a
+        restore loses no data and the policy re-schedules.
         """
-        S, L, B, m = (self.shards, self.family.L, self.num_buckets, self.m)
+        S, L = self.shards, self.family.L
+        levels: Dict[str, Dict] = {}
+        for i, l in enumerate(self._levels):
+            levels[f"{i:04d}"] = {
+                **{k: np.asarray(v) for k, v in l.leaves.items()},
+                "meta": {"uid": np.int64(l.uid),
+                         "level": np.int64(l.level),
+                         "rows_s": l.rows_s.astype(np.int64),
+                         "live_s": l.live_s.astype(np.int64)},
+            }
         if self._delta is not None:
-            main = {k: np.asarray(v) for k, v in self._main.items()}
             delta = {k: np.asarray(v) for k, v in self._delta.items()}
         else:
-            main = {"x": np.zeros((S, 0, 0), np.float32),
-                    "ids": np.zeros((S, 0), np.int32),
-                    "bucket_ids": np.zeros((S, 0, L), np.int32),
-                    "perm": np.zeros((S, L, 0), np.int32),
-                    "starts": np.zeros((S, L, B + 1), np.int32),
-                    "registers": np.zeros((S, L, B, m), np.uint8),
-                    "live": np.zeros((S, 1), bool),
-                    "tomb_counts": np.zeros((S, L, B), np.int32)}
             C = self.delta_capacity
             delta = {"x": np.zeros((S, C + 1, 0), np.float32),
                      "bucket_ids": np.full((S, C + 1, L), -1, np.int32),
@@ -636,47 +919,82 @@ class ShardedDynamicHybridIndex:
                      "count": np.zeros((S,), np.int32)}
         return {
             "params": self.params,
-            "main": main,
+            "levels": levels,
             "delta": delta,
             "meta": {"next_id": np.int64(self._next_id),
-                     "built": np.int64(0 if self._delta is None else 1)},
+                     "built": np.int64(0 if self._delta is None else 1),
+                     "next_uid": np.int64(self._next_uid)},
         }
 
     def load_state_dict(self, state) -> "ShardedDynamicHybridIndex":
-        """Restore sharded segment state saved by ``state_dict``."""
+        """Restore sharded level-stack state saved by ``state_dict``."""
         self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
         # cached query fns bake in delta_capacity (the max_out clamp):
         # a restore may change it, so the cache cannot survive
         self._fn_cache = {}
+        self._tasks = []
         self._next_id = int(np.asarray(state["meta"]["next_id"]))
+        self._next_uid = int(np.asarray(state["meta"].get("next_uid", 0)))
         if int(np.asarray(state["meta"]["built"])) == 0:
-            self._main = self._delta = None
+            self._levels, self._delta = [], None
+            self._loc = {}
             return self
-        ms, ds = state["main"], state["delta"]
-        S = np.asarray(ms["live"]).shape[0]
+        ds = state["delta"]
+        S = np.asarray(ds["live"]).shape[0]
         assert S == self.shards, (S, self.shards)
         put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
-        self._main = {k: put(v) for k, v in ms.items()}
         self._delta = {k: put(v) for k, v in ds.items()}
-        self._n_pad = int(np.asarray(ms["x"]).shape[1])
-        self._d = int(np.asarray(ms["x"]).shape[2])
-        self._dtype = np.asarray(ms["x"]).dtype
         self.delta_capacity = int(np.asarray(ds["live"]).shape[1]) - 1
-        # host bookkeeping from segment state
+        self._d = int(np.asarray(ds["x"]).shape[2])
+        self._dtype = np.asarray(ds["x"]).dtype
         self._loc = {}
-        mids = np.asarray(ms["ids"])
-        mlive = np.asarray(ms["live"])[:, :self._n_pad]
-        real = mids != -1
-        self._main_rows_s = real.sum(axis=1).astype(np.int64)
-        self._main_live_s = mlive.sum(axis=1).astype(np.int64)
+        self._levels = []
+        lvls = dict(state.get("levels") or {})
+        ms = state.get("main")
+        if ms is not None and np.asarray(ms["x"]).shape[1] > 0:
+            # pre-stack checkpoint format (one sharded "main", no
+            # meta): migrate to a single level — ignoring it would
+            # silently restore an empty corpus
+            mids = np.asarray(ms["ids"])
+            n_pad = int(np.asarray(ms["x"]).shape[1])
+            mlive = np.asarray(ms["live"])[:, :n_pad]
+            rows_s = (mids != -1).sum(axis=1).astype(np.int64)
+            lvls["main"] = {
+                **ms,
+                "meta": {"uid": np.int64(0),
+                         "level": np.int64(self.policy.level_for(
+                             int(rows_s.sum()), self.delta_capacity)),
+                         "rows_s": rows_s,
+                         "live_s": mlive.sum(axis=1).astype(np.int64)},
+            }
+        for key in sorted(lvls):
+            s = dict(lvls[key])
+            meta = s.pop("meta")
+            leaves = {k: put(v) for k, v in s.items()}
+            lvl = _ShardLevel(
+                uid=int(np.asarray(meta["uid"])),
+                level=int(np.asarray(meta["level"])),
+                n_pad=int(np.asarray(s["x"]).shape[1]),
+                leaves=leaves,
+                rows_s=np.asarray(meta["rows_s"]).astype(np.int64),
+                live_s=np.asarray(meta["live_s"]).astype(np.int64))
+            self._levels.append(lvl)
+            mids = np.asarray(s["ids"])
+            mlive = np.asarray(s["live"])[:, :lvl.n_pad]
+            for sh_i in range(self.shards):
+                for i in np.nonzero(mlive[sh_i])[0]:
+                    self._loc[int(mids[sh_i, i])] = (sh_i, "m", lvl.uid,
+                                                     int(i))
+        self._next_uid = max(self._next_uid,
+                             max([l.uid for l in self._levels],
+                                 default=-1) + 1)
+        # delta host bookkeeping from segment state
         self._delta_count_s = np.asarray(ds["count"]).astype(np.int64)
         dlive = np.asarray(ds["live"])[:, :self.delta_capacity]
         self._delta_live_s = dlive.sum(axis=1).astype(np.int64)
         dids = np.asarray(ds["ids"])
-        for s in range(self.shards):
-            for i in np.nonzero(mlive[s])[0]:
-                self._loc[int(mids[s, i])] = (s, "m", int(i))
-            for i in range(int(self._delta_count_s[s])):
-                if dlive[s, i]:
-                    self._loc[int(dids[s, i])] = (s, "d", int(i))
+        for s_i in range(self.shards):
+            for i in range(int(self._delta_count_s[s_i])):
+                if dlive[s_i, i]:
+                    self._loc[int(dids[s_i, i])] = (s_i, "d", int(i))
         return self

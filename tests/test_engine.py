@@ -1,18 +1,19 @@
 """Segment engine: the shared estimate/route/partition/search pipeline.
 
-Checks that the compat wrappers (router.estimate_routes*) and the
-index-facing engine path agree, that static segments are the dead-count
-zero case of the unified estimator, and the satellite fixes
-(memory_stats before build, exact n_linear).
+Checks that the compat wrappers (estimate_routes*) and the index-facing
+engine path agree, that static segments are the dead-count zero case of
+the unified estimator, that the deprecated ``core.router`` shim warns
+and re-exports, and the satellite fixes (memory_stats before build,
+exact n_linear).
 """
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CostModel, HybridLSHIndex
 from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
+                               estimate_routes, estimate_routes_dynamic,
                                finalize_route)
 from repro.core.lsh import make_family
-from repro.core.router import estimate_routes, estimate_routes_dynamic
 from repro.data import clustered_dataset
 from repro.streaming import CompactionPolicy, DynamicHybridIndex
 from repro.streaming import delta as delta_lib
@@ -114,3 +115,20 @@ def test_query_result_n_linear_dedups_padding():
     assert res.n_linear == len(set(np.asarray(res.lin_idx).tolist()))
     engine = QueryEngine(idx.cost_model)
     assert engine.cost_model is idx.cost_model
+
+
+def test_router_shim_warns_and_reexports():
+    """The deprecated ``core.router`` shim: one intentional import site
+    — it must warn and hand back the engine's objects unchanged, so it
+    can be deleted (with this test) next release."""
+    import importlib
+    import warnings
+
+    import repro.core.router as router_mod
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        router_mod = importlib.reload(router_mod)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert router_mod.estimate_routes is estimate_routes
+    assert router_mod.estimate_routes_dynamic is estimate_routes_dynamic
+    assert router_mod.finalize_route is finalize_route

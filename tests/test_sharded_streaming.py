@@ -131,3 +131,113 @@ assert restored.delete(new.tolist()) == 4
 print("CKPT_OK")
 """)
     assert "CKPT_OK" in out
+
+
+def test_sharded_lsm_budgeted_merge_equivalence():
+    """Freezes build per-shard level-0 entries; budgeted compact_step
+    advances merges off the query path; reported sets match the fresh
+    single-host truth at every intermediate point — including deletes
+    that land while a merge is staged."""
+    out = _run(_COMMON + r"""
+lsm = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0, fanout=2,
+                       step_rows=64)
+sh = ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                               cap=CAP, delta_capacity=64,
+                               policy=lsm, routing="per_shard",
+                               max_out=900, key=0)
+sh.build(x[:256])
+sh.insert(x[256:600])          # several freezes; merges queue, unrun
+st = sh.index_stats()
+assert st["freezes"] >= 2 and st["segments"] >= 2, st
+assert sh.has_compaction_work
+live2 = np.ones(900, bool); live2[600:] = False
+def check(live_mask, note):
+    ids = np.nonzero(live_mask)[0]
+    f2 = DynamicHybridIndex(fam, num_buckets=B, m=M, cap=CAP, key=0,
+                            delta_capacity=512, policy=NO_AUTO)
+    f2.build(x[live_mask], ids=ids)
+    for force in ("lsh", "linear"):
+        got = sh.query(q, R, force=force).neighbor_sets()
+        want2 = f2.query(q, R, force=force).neighbor_sets()
+        assert got == want2, (note, force)
+check(live2, "pre-step")
+sh.compact_step(64)            # stage part of a merge
+check(live2, "mid-stage")
+dead = list(range(0, 500, 5))  # staged + unstaged + delta rows
+assert sh.delete(dead) == len(dead)
+live2[dead] = False
+check(live2, "deleted-mid-merge")
+while sh.compact_step(128):
+    pass
+assert not sh.has_compaction_work
+check(live2, "drained")
+st = sh.index_stats()
+assert st["compactions"] >= 1 and st["compact_steps"] > 0, st
+assert st["merges_per_level"], st
+print("LSM_OK")
+""")
+    assert "LSM_OK" in out
+
+
+def test_sharded_checkpoint_mid_merge(tmp_path):
+    """Save -> restore a sharded stack mid-merge: query-set equality
+    with the live index; the restored index re-derives its merge
+    schedule and keeps streaming."""
+    out = _run(_COMMON + rf"""
+from repro.checkpoint import CheckpointManager
+
+lsm = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0, fanout=2,
+                       step_rows=64)
+def mk():
+    return ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                                     cap=CAP, delta_capacity=64,
+                                     policy=lsm, routing="per_shard",
+                                     max_out=900, key=0)
+sh = mk()
+sh.build(x[:256])
+sh.insert(x[256:600])
+sh.delete(range(32, 96))
+assert sh.has_compaction_work
+sh.compact_step(64)                       # mid-merge snapshot
+mgr = CheckpointManager({str(tmp_path)!r})
+mgr.save_index(5, sh)
+
+restored = mk()
+assert mgr.restore_index(restored) == 5
+for f in ("lsh", "linear"):
+    assert (restored.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+a, b = sh.index_stats(), restored.index_stats()
+for key in ("n_live", "n_main", "n_main_dead", "delta_count",
+            "delta_live", "segments", "levels", "live_per_shard",
+            "delta_per_shard"):
+    assert a[key] == b[key], key
+# both finish their compaction; the restored one keeps streaming
+new = restored.insert(x[600:620])
+assert new.min() >= 600
+while restored.compact_step(512):
+    pass
+while sh.compact_step(512):
+    pass
+sh.insert(x[600:620], ids=new)
+for f in ("lsh", "linear"):
+    assert (restored.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+
+# pre-stack (PR-2) checkpoint format migrates: "main" -> one level
+# (dict(...) not literals: this script is an f-string, braces are taken)
+restored.compact()
+sd = restored.state_dict()
+lv = dict(sd["levels"]["0000"]); lv.pop("meta")
+old = dict(params=sd["params"], main=lv, delta=sd["delta"],
+           meta=dict(next_id=sd["meta"]["next_id"],
+                     built=sd["meta"]["built"]))
+mig = mk()
+mig.load_state_dict(old)
+assert mig.n == restored.n and mig.index_stats()["segments"] == 1
+for f in ("lsh", "linear"):
+    assert (mig.query(q, R, force=f).neighbor_sets()
+            == restored.query(q, R, force=f).neighbor_sets()), f
+print("CKPT_MID_OK")
+""")
+    assert "CKPT_MID_OK" in out

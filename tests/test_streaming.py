@@ -107,16 +107,21 @@ def test_compaction_preserves_neighbor_sets():
 
 
 def test_auto_compaction_triggers():
+    """Delta fills freeze level-0 segments; level overflow merges them;
+    tombstone pressure folds the whole stack (dead rows reclaimed)."""
     x = _data()
     dyn = _dyn(delta_capacity=64,
                policy=CompactionPolicy(delta_fill=1.0,
-                                       tombstone_ratio=0.25))
+                                       tombstone_ratio=0.25, fanout=4))
     dyn.build(x[:300])
-    dyn.insert(x[300:600])       # >> delta capacity: fills force compaction
-    assert dyn.index_stats()["compactions"] >= 3
+    dyn.insert(x[300:600])       # >> delta capacity: fills force freezes
+    st = dyn.index_stats()
+    assert st["freezes"] >= 4            # one seal per delta fill
+    assert st["compactions"] >= 1        # level-0 overflow merged
+    assert st["merges_per_level"].get(1, 0) >= 1
     assert dyn.n == 600
-    n_before = dyn.index_stats()["compactions"]
-    dyn.delete(range(0, 200))    # 200/600 > 0.25 tombstone ratio
+    n_before = st["compactions"]
+    dyn.delete(range(0, 200))    # 200/frozen > 0.25 tombstone ratio
     st = dyn.index_stats()
     assert st["compactions"] > n_before and st["n_main_dead"] == 0
     assert dyn.n == 400
@@ -192,7 +197,8 @@ def test_empty_start_and_delta_only_queries():
     want = _fresh_sets(x[:100], x[:5], "lsh")
     assert got == want
     dyn.compact()                             # first compaction creates main
-    assert dyn.main is not None and dyn.main.n == 100
+    assert dyn.main is not None
+    assert dyn.index_stats()["n_main"] == 100  # real rows (pads excluded)
     assert dyn.query(x[:5], R, force="lsh").neighbor_sets() == want
 
 
@@ -226,3 +232,180 @@ def test_hybrid_routing_still_works_under_churn():
     # self-match (distance 0 collides in every table).
     for i in range(len(q)):
         assert 100 + i in res.neighbors(i).tolist()
+
+
+# ---------------------------------------------------------------------------
+# LSM segment stack: freezes, tiered merges, budgeted off-query-path steps
+# ---------------------------------------------------------------------------
+def test_lsm_stack_equivalence_under_churn():
+    """Churn over a multi-level stack — including queries issued while a
+    merge is mid-flight — reports exactly the fresh-build sets."""
+    x = _data()
+    q = x[::47][:10]
+    dyn = _dyn(delta_capacity=128,
+               policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                       fanout=3, step_rows=96))
+    dyn.build(x[:400])
+    dyn.insert(x[400:700])
+    dyn.delete(range(100, 200, 2))
+    dyn.insert(x[700:])
+    dyn.delete(range(650, 680))
+    st = dyn.index_stats()
+    assert st["segments"] >= 2           # the level stack is in play
+    live = np.ones(900, bool)
+    live[100:200:2] = False
+    live[650:680] = False
+    live_ids = np.nonzero(live)[0]
+    want = {f: _fresh_sets(x[live], q, f, ext_ids=live_ids)
+            for f in ("lsh", "linear")}
+    # mid-merge: advance pending work a little, query between steps
+    for _ in range(3):
+        if dyn.stack.has_work:
+            dyn.compact_step(64)
+    for force in ("lsh", "linear"):
+        assert dyn.query(q, R, force=force).neighbor_sets() == want[force]
+    # drain to completion: merged segments swapped in, sets unchanged
+    while dyn.compact_step(256):
+        pass
+    assert not dyn.stack.has_work
+    for force in ("lsh", "linear"):
+        assert dyn.query(q, R, force=force).neighbor_sets() == want[force]
+    st = dyn.index_stats()
+    assert st["compact_steps"] > 0 and st["merges_per_level"]
+
+
+def test_delete_during_budgeted_merge_not_resurrected():
+    """Rows deleted after being staged into a pending merge must not
+    come back when the merged segment swaps in."""
+    x = _data(n=512)
+    q = x[::40][:8]
+    dyn = _dyn(delta_capacity=128,
+               policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                       fanout=2, step_rows=64))
+    dyn.build(x[:256])
+    dyn.insert(x[256:512])               # two freezes -> merge scheduled
+    assert dyn.stack.has_work
+    dyn.compact_step(64)                 # stage part of the inputs
+    dead = list(range(0, 500, 3))        # hits staged + unstaged + delta
+    assert dyn.delete(dead) == len(dead)
+    while dyn.compact_step(128):
+        pass
+    live = np.ones(512, bool)
+    live[dead] = False
+    live_ids = np.nonzero(live)[0]
+    for force in ("lsh", "linear"):
+        got = dyn.query(q, R, force=force).neighbor_sets()
+        assert got == _fresh_sets(x[live], q, force, ext_ids=live_ids)
+        flat = set().union(*got.values()) if got else set()
+        assert flat.isdisjoint(dead)
+    # the swap kept the id -> location map consistent: delete moved rows
+    assert dyn.delete(live_ids[:10].tolist()) == 10
+    assert dyn.n == int(live.sum()) - 10
+
+
+def test_compact_step_budget_bounds_staging():
+    """Each staging step gathers at most budget_rows rows; queries stay
+    correct at every intermediate point."""
+    x = _data(n=600)
+    dyn = _dyn(delta_capacity=128,
+               policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                       fanout=2, step_rows=50))
+    dyn.build(x[:256])
+    dyn.insert(x[256:600])
+    assert dyn.stack.has_work
+    want = _fresh_sets(x, x[:6], "lsh")
+    steps = 0
+    while dyn.compact_step(50):
+        steps += 1
+        assert dyn.query(x[:6], R, force="lsh").neighbor_sets() == want
+        assert steps < 100
+    # a ~256-row merge at budget 50 needs several staging steps + swap
+    assert dyn.index_stats()["last_merge_steps"] >= 3
+
+
+def test_multiprobe_over_stack_and_delta():
+    """Multi-probe applies to frozen levels AND the delta through the
+    engine's segment path: monotone supersets, verified within r."""
+    x = _data()
+    fam = make_family("cosine", d=D, L=L, r=0.3)
+    dyn = DynamicHybridIndex(fam, num_buckets=B, m=M, cap=CAP, key=0,
+                             delta_capacity=128, policy=NO_AUTO)
+    dyn.build(x[:500])
+    dyn.insert(x[500:700])       # one freeze (128) + 72 delta rows
+    assert dyn.index_stats()["segments"] == 2
+    q = x[::50][:8]
+    r = 0.4
+    base = dyn.query(q, r, force="lsh", num_probes=1).neighbor_sets()
+    probed = dyn.query(q, r, force="lsh", num_probes=3).neighbor_sets()
+    lin = dyn.query(q, r, force="linear").neighbor_sets()
+    for i in base:
+        assert base[i] <= probed[i] <= lin[i], i
+    e1 = dyn.estimate(q, num_probes=1)
+    e3 = dyn.estimate(q, num_probes=3)
+    assert (np.asarray(e3.collisions) >= np.asarray(e1.collisions)).all()
+    with pytest.raises(ValueError):
+        _dyn().build(x[:64]).query(q, R, num_probes=2)  # l2: no margins
+
+
+def test_checkpoint_roundtrip_multilevel_mid_merge(tmp_path):
+    """Save -> restore a stack mid-merge: query sets equal the live
+    index; the restored index re-derives its merge schedule and keeps
+    streaming."""
+    x = _data()
+    q = x[::70][:8]
+    policy = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                              fanout=2, step_rows=64)
+    dyn = _dyn(delta_capacity=128, policy=policy)
+    dyn.build(x[:256])
+    dyn.insert(x[256:600])
+    dyn.delete(range(64, 128))
+    assert dyn.index_stats()["segments"] >= 2
+    assert dyn.stack.has_work
+    dyn.compact_step(64)                 # mid-merge snapshot
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_index(11, dyn)
+
+    restored = _dyn(delta_capacity=128, policy=policy)
+    assert mgr.restore_index(restored) == 11
+    for f in ("lsh", "linear"):
+        assert (restored.query(q, R, force=f).neighbor_sets()
+                == dyn.query(q, R, force=f).neighbor_sets()), f
+    a, b = dyn.index_stats(), restored.index_stats()
+    for key in ("n_live", "n_main", "n_main_dead", "delta_count",
+                "delta_live", "segments", "levels"):
+        assert a[key] == b[key], key
+    # both finish their compaction (restored re-schedules on mutation)
+    new = restored.insert(x[600:620])
+    assert new.min() >= 600              # ids continue past the old max
+    while restored.compact_step(512):
+        pass
+    while dyn.compact_step(512):
+        pass
+    dyn.insert(x[600:620], ids=new)
+    for f in ("lsh", "linear"):
+        assert (restored.query(q, R, force=f).neighbor_sets()
+                == dyn.query(q, R, force=f).neighbor_sets()), f
+
+
+def test_load_state_dict_migrates_pre_stack_checkpoint():
+    """A pre-level-stack checkpoint (one 'main' subtree, no segment
+    meta) restores as a single frozen segment instead of silently
+    dropping the corpus."""
+    x = _data(n=400)
+    q = x[::40][:8]
+    dyn = _dyn().build(x[:350])
+    dyn.delete(range(40, 90))
+    sd = dyn.state_dict()
+    seg = dict(sd["segments"]["0000"])
+    seg.pop("meta")
+    old = {"params": sd["params"], "main": seg, "delta": sd["delta"],
+           "meta": {"next_id": sd["meta"]["next_id"],
+                    "delta_d": sd["meta"]["delta_d"]}}
+    mig = _dyn().load_state_dict(old)
+    assert mig.n == dyn.n and mig.index_stats()["segments"] == 1
+    for f in ("lsh", "linear"):
+        assert (mig.query(q, R, force=f).neighbor_sets()
+                == dyn.query(q, R, force=f).neighbor_sets()), f
+    # keeps streaming: the migrated segment is deletable/insertable
+    assert mig.delete([100]) == 1
+    assert mig.insert(x[350:354]).min() >= 350
