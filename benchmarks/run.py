@@ -25,17 +25,47 @@ def main() -> None:
                          "--emit BENCH_streaming.json runs the single-host "
                          "bench, --emit BENCH_sharded.json the mesh-sharded "
                          "one (>= 2 host devices forced), --emit "
-                         "BENCH_lsm.json the LSM compaction-stall bench. "
+                         "BENCH_lsm.json the LSM compaction-stall bench, "
+                         "--emit BENCH_rebalance.json the skewed-stream "
+                         "placement comparison (>= 2 host devices forced). "
                          "Skips the paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
-    if args.emit and "sharded" in os.path.basename(args.emit):
+    def force_two_host_devices():
         # must precede the first jax import in this process
         flags = os.environ.get("XLA_FLAGS", "")
         if "host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 flags + " --xla_force_host_platform_device_count=2").strip()
+
+    if args.emit and "rebalance" in os.path.basename(args.emit):
+        force_two_host_devices()
+        from benchmarks import sharded_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = sharded_bench.skew_main(scale, emit=args.emit)
+        print(f"rebalance_p99_keep_local,"
+              f"{1e6 * rows['p99_keep_local_s']:.1f},"
+              f"linear route; max-shard frac "
+              f"{rows['max_shard_frac_keep_local']:.2f}, "
+              f"padded rows {rows['sum_n_pad_keep_local']}")
+        print(f"rebalance_p99_load_balance,"
+              f"{1e6 * rows['p99_load_balance_s']:.1f},"
+              f"linear route; max-shard frac "
+              f"{rows['max_shard_frac_load_balance']:.2f}, "
+              f"padded rows {rows['sum_n_pad_load_balance']} "
+              f"({rows['rows_moved_load_balance']} rows moved)")
+        print(f"rebalance_skew_latency_delta,"
+              f"{1e6 * rows['skew_latency_delta_s']:.1f},"
+              f"linear-route p99 cut {rows['p99_keep_local_s'] / max(rows['p99_load_balance_s'], 1e-12):.2f}x; "
+              f"padded-rows cut {rows['padded_rows_cut']:.2f}x")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "sharded" in os.path.basename(args.emit):
+        force_two_host_devices()
         from benchmarks import sharded_bench
         print("name,us_per_call,derived")
         t0 = time.time()

@@ -140,7 +140,11 @@ class CheckpointManager:
         stack, the delta, and the tombstone buffers land as one leaf
         file each under the usual atomic COMMITTED protocol.  Sharded
         segment leaves are gathered to full host arrays (leading shard
-        axis kept), so the on-disk format is mesh-agnostic.
+        axis kept), so the on-disk format is mesh-agnostic.  The
+        sharded index's placement policy name and per-shard level
+        layouts (``rows_s``/``live_s`` meta) ride along, so rebalanced
+        states round-trip exactly (docs/streaming.md has the manifest
+        layout).
         """
         self.save(step, index.state_dict(), blocking=blocking)
 

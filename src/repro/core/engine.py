@@ -314,21 +314,45 @@ def compact_results(ids: jax.Array, dists: jax.Array, mask: jax.Array,
 # The engine
 # ---------------------------------------------------------------------------
 class QueryEngine:
-    """Owns the hybrid pipeline once, for any list of segments."""
+    """Owns the hybrid pipeline once, for any list of segments.
+
+    ``estimate``/``search_group`` are pure traced functions — the
+    sharded indexes call them inside ``shard_map`` and merge the terms
+    across shards themselves; ``query`` is the host-side single-host
+    pipeline that additionally partitions the batch.
+    """
 
     def __init__(self, cost_model: CostModel, impl: Optional[str] = None):
+        """Args: ``cost_model`` — Algorithm 2 constants (alpha, beta);
+        ``impl`` — kernel impl override (e.g. ``"pallas_interpret"``)."""
         self.cost_model = cost_model
         self.impl = impl
 
     # traceable pieces (also used inside shard_map by the sharded paths)
     def estimate(self, segments: Sequence[Segment],
                  qbuckets: jax.Array) -> RouteEstimate:
+        """Algorithm 2 lines 1-4 over the whole segment list.
+
+        Args:
+          segments: engine segments (frozen levels + delta, any length).
+          qbuckets: (Q, L) int query buckets — or (Q, V) virtual-table
+            columns under multi-probe.
+
+        Returns the vectorized ``RouteEstimate`` (all fields (Q,) except
+        the scalar ``linear_cost``)."""
         return finalize_route([s.estimate_terms(qbuckets) for s in segments],
                               self.cost_model, impl=self.impl)
 
     def search_group(self, segments: Sequence[Segment], qbuckets: jax.Array,
                      q: jax.Array, r, *, lsh_route: bool):
-        """Search every segment for one routed group; concat the buffers."""
+        """Search every segment for one routed group; concat the buffers.
+
+        Args:
+          qbuckets/q: (G, L) buckets and (G, d) rows of the group.
+          r: report radius; ``lsh_route`` picks the strategy.
+
+        Returns sentinel-padded ``(ids, dists, mask)``, each (G, C) with
+        C the concatenation of the per-segment output widths."""
         parts = [s.search(qbuckets, q, r, lsh_route=lsh_route)
                  for s in segments]
         if len(parts) == 1:
@@ -342,8 +366,16 @@ class QueryEngine:
               force: Optional[str] = None) -> QueryResult:
         """Hybrid r-NN reporting over the segments.
 
-        force: None (hybrid routing) | "lsh" | "linear" — the two
-        baselines of the paper's Figure 2.
+        Args:
+          segments: engine segments, any length.
+          queries: (Q, d) rows; ``qbuckets``: (Q, L) their buckets.
+          r: report radius (every returned neighbor has dist <= r).
+          force: None (hybrid routing) | "lsh" | "linear" — the two
+            baselines of the paper's Figure 2.
+
+        Returns a ``QueryResult``; ``neighbors(i)``/``neighbor_sets()``
+        extract reported ids regardless of which strategy served each
+        query.
         """
         nq = queries.shape[0]
         route = self.estimate(segments, qbuckets)

@@ -1,10 +1,24 @@
-"""Hybrid router (Algorithm 2) — compatibility surface.
+"""DEPRECATED compatibility shim for the pre-engine router module.
 
-The actual pipeline lives in ``repro.core.engine`` since the
-segment-engine refactor: ``finalize_route`` is the one tombstone-aware
-estimate path (dead counts zero for static segments), and
-``QueryEngine`` owns estimate→route→partition→search.  This module
-re-exports the public names so existing imports keep working.
+Everything here is a re-export from ``repro.core.engine``, where the
+pipeline has lived since the segment-engine refactor (PR 2).  Update
+imports symbol-for-symbol — the names are identical:
+
+  =================================  =====================================
+  old import                         replacement
+  =================================  =====================================
+  ``router.RouteEstimate``           ``engine.RouteEstimate``
+  ``router.estimate_routes``         ``engine.estimate_routes``
+  ``router.estimate_routes_dynamic`` ``engine.estimate_routes_dynamic``
+  ``router.finalize_route``          ``engine.finalize_route``
+  ``router.partition_indices``       ``engine.partition_indices``
+  ``router.compact_results``         ``engine.compact_results``
+  =================================  =====================================
+
+Deprecation window: this shim survives two more PRs after PR 4 and is
+then deleted (see docs/architecture.md, "Deprecations").  New code
+should also prefer the higher-level ``engine.QueryEngine`` /
+``engine.TableSegment`` composition over calling these directly.
 
 On TPU the per-query ``if`` of Algorithm 2 becomes *batch partitioning*:
 the estimator runs vectorized over the query batch, then the batch is
@@ -21,8 +35,12 @@ from repro.core.engine import (RouteEstimate, _pad_size, compact_results,
                                finalize_route, partition_indices)
 
 warnings.warn(
-    "repro.core.router is a compatibility shim and will be removed in the "
-    "next release; import from repro.core.engine instead",
+    "repro.core.router is a deprecated re-export shim (removal: two PRs "
+    "after PR 4; see docs/architecture.md 'Deprecations'). Replace "
+    "repro.core.router.{RouteEstimate, estimate_routes, "
+    "estimate_routes_dynamic, finalize_route, partition_indices, "
+    "compact_results} with the identically-named symbols in "
+    "repro.core.engine",
     DeprecationWarning, stacklevel=2)
 
 __all__ = ["RouteEstimate", "estimate_routes", "estimate_routes_dynamic",

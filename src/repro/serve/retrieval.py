@@ -54,10 +54,24 @@ class RetrievalConfig:
     mesh_axis: str = "data"
     shard_routing: str = "global"  # or "per_shard" (density-adaptive)
     shard_max_out: int = 512       # reported neighbors per (shard, query)
+    # Merge-time rebalancing: placement of surviving merge rows across
+    # shards — "keep_local" (never move), "round_robin", or
+    # "load_balance" (water-fill per-shard live counts).  `stats` then
+    # reports `shard_skew` (max/mean live load) and cumulative
+    # `rows_moved` so skewed streams are visible and correctable.
+    shard_placement: str = "keep_local"
 
 
 class RetrievalService:
-    """Embed-and-report-near-neighbors service."""
+    """Embed-and-report-near-neighbors service.
+
+    Wraps an LM encoder (any arch config) over a streaming index:
+    ``index_corpus`` builds, ``add_documents``/``remove_documents``
+    mutate live, ``query`` reports r-near neighbors for an embedded
+    request batch, ``compaction_tick`` advances merge work off the
+    query path, and ``stats`` exposes routing + compaction +
+    rebalancing counters.
+    """
 
     def __init__(self, cfg: ArchConfig, par: ParallelConfig, params,
                  rcfg: RetrievalConfig = RetrievalConfig()):
@@ -71,6 +85,7 @@ class RetrievalService:
         self._compaction_ticks = 0
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Normalized (B, d_model) embeddings for one token batch."""
         return self._embed(self.params, batch)
 
     def _embed_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
@@ -78,6 +93,9 @@ class RetrievalService:
         return jnp.asarray(np.concatenate(embs, axis=0))
 
     def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
+        """Embed + build the corpus index per ``RetrievalConfig`` (mesh
+        set -> sharded index with the configured routing/placement);
+        returns the corpus size."""
         corpus = self._embed_corpus(batches)
         r = self.rcfg
         fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
@@ -94,7 +112,8 @@ class RetrievalService:
         if r.mesh is not None:
             self.index = ShardedDynamicHybridIndex(
                 fam, mesh=r.mesh, data_axis=r.mesh_axis,
-                routing=r.shard_routing, max_out=r.shard_max_out, **common)
+                routing=r.shard_routing, max_out=r.shard_max_out,
+                placement=r.shard_placement, **common)
         else:
             self.index = DynamicHybridIndex(fam, **common)
         self.index.build(corpus)
@@ -146,6 +165,15 @@ class RetrievalService:
 
     @property
     def stats(self) -> Dict[str, float]:
+        """Serving counters merged with the index's ``index_stats()``.
+
+        Includes the per-level LSM counters (segments, levels,
+        pending_merges, merges_per_level, compact_steps, freezes, ...)
+        and — when the corpus is mesh-sharded — the rebalancing view:
+        ``live_per_shard``/``delta_per_shard`` loads, ``shard_skew``
+        (max/mean live load; 1.0 = balanced), the active ``placement``
+        policy, and cumulative ``rows_moved`` across shards.
+        """
         served = max(self._queries_served, 1)
         out = {"queries": self._queries_served,
                "linear_served": self._linear_served,
@@ -153,8 +181,5 @@ class RetrievalService:
                "compaction_ticks": self._compaction_ticks,
                "index_size": self.index.n if self.index else 0}
         if self.index is not None:
-            # includes the per-level LSM counters: segments, levels,
-            # pending_merges, merges_per_level, rows_merged_per_level,
-            # compact_steps, freezes, ...
             out.update(self.index.index_stats())
         return out

@@ -16,7 +16,12 @@ static Hybrid LSH core.
                               with incremental ``compact_step`` merges
   * ``streaming.compaction``— tiered trigger policy + per-level stats
 """
-from repro.streaming.compaction import CompactionPolicy, CompactionStats
+from repro.streaming.compaction import (CompactionPolicy, CompactionStats,
+                                        KeepLocalPlacement,
+                                        LoadBalancePlacement,
+                                        PlacementPolicy,
+                                        RoundRobinPlacement,
+                                        make_placement_policy)
 from repro.streaming.delta import DeltaSegment, DeltaView, make_delta
 from repro.streaming.index import DynamicHybridIndex
 from repro.streaming.segment import (FrozenSegment, MainSegment,
@@ -28,6 +33,8 @@ from repro.streaming.tombstones import Tombstones, make_tombstones
 
 __all__ = ["DynamicHybridIndex", "ShardedDynamicHybridIndex",
            "ShardedQueryResult", "CompactionPolicy", "CompactionStats",
+           "PlacementPolicy", "KeepLocalPlacement", "RoundRobinPlacement",
+           "LoadBalancePlacement", "make_placement_policy",
            "DeltaSegment", "DeltaView", "make_delta", "MainSegment",
            "FrozenSegment", "SegmentStack", "build_main", "freeze_segment",
            "Tombstones", "make_tombstones"]

@@ -1,4 +1,4 @@
-"""Tiered compaction policy + per-level bookkeeping for the segment stack.
+"""Tiered compaction policy, merge-time placement, per-level bookkeeping.
 
 The streaming index keeps its frozen segments in an LSM-style level
 stack (``streaming.segment.SegmentStack``).  Three kinds of maintenance
@@ -19,14 +19,169 @@ Merges are *scheduled*, not run inline: the index materializes them as
 ``step_rows=None`` the index drains scheduled merges synchronously
 (the simple single-host default); the serving layer sets ``step_rows``
 and interleaves ticks between query batches.
+
+For the mesh-sharded index a merge is also the one moment rows can
+*move between shards* (the surviving rows sit in host-side staging
+buffers anyway).  ``PlacementPolicy`` decides each surviving row's
+target shard at swap time:
+
+  * ``keep_local``   — rows stay on their origin shard (the PR 2/3
+                       behavior; zero movement, skew persists forever)
+  * ``round_robin``  — rows are dealt over shards in order, ignoring
+                       current load (cheap, eventually-even)
+  * ``load_balance`` — water-fill against per-shard live-row counts so
+                       the post-merge max shard load is minimized while
+                       moving as few rows as possible
+
+Skew matters because sharded levels pad every shard to the *max* shard's
+row count (one common ``n_pad`` per level keeps the level a single
+stacked leaf): a shard hoarding rows inflates every shard's padded scan,
+so the per-query cost estimate — and the latency it predicts — degrades
+globally, exactly the density-skew failure mode the HLL estimator
+exists to detect.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
-__all__ = ["CompactionPolicy", "CompactionStats"]
+import numpy as np
+
+__all__ = ["CompactionPolicy", "CompactionStats", "PlacementPolicy",
+           "KeepLocalPlacement", "RoundRobinPlacement",
+           "LoadBalancePlacement", "make_placement_policy",
+           "water_fill_counts"]
+
+
+# ---------------------------------------------------------------------------
+# Merge-time shard placement
+# ---------------------------------------------------------------------------
+def water_fill_counts(base_load: np.ndarray, k: int) -> np.ndarray:
+    """Split ``k`` fungible rows over shards to minimize the max load.
+
+    Args:
+      base_load: (S,) int — live rows each shard already holds outside
+        the rows being placed.
+      k: number of rows to place.
+
+    Returns (S,) int counts summing to ``k``: the classic water-fill —
+    raise the lowest-loaded shards to a common level, ties broken by
+    shard order (deterministic).
+    """
+    base = np.asarray(base_load, np.int64)
+    k = int(k)
+    if k <= 0:
+        return np.zeros_like(base)
+    lo, hi = int(base.min()), int(base.max()) + k
+
+    def deficit(level: int) -> int:
+        return int(np.maximum(0, level - base).sum())
+
+    while lo < hi:                      # largest level with deficit <= k
+        mid = (lo + hi + 1) // 2
+        if deficit(mid) <= k:
+            lo = mid
+        else:
+            hi = mid - 1
+    counts = np.maximum(0, lo - base)
+    rem = k - int(counts.sum())
+    order = np.argsort(base + counts, kind="stable")
+    counts[order[:rem]] += 1
+    return counts
+
+
+class PlacementPolicy:
+    """Assigns each surviving row of a staged merge to a target shard.
+
+    Subclass and override ``assign`` for custom placement; the sharded
+    index calls it once per completed merge, at swap time, after the
+    mid-merge delete re-check (so only truly-live rows are placed).
+    """
+
+    name = "custom"
+
+    def assign(self, origins: np.ndarray, base_load: np.ndarray,
+               shards: int) -> np.ndarray:
+        """Target shard per surviving merge row.
+
+        Args:
+          origins: (k,) int — each row's current (origin) shard.
+          base_load: (S,) int — per-shard live rows *outside* this merge
+            (remaining levels + delta), the load the placed rows add to.
+          shards: shard count S.
+
+        Returns (k,) int targets in [0, S).
+        """
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class KeepLocalPlacement(PlacementPolicy):
+    """Rows never leave their shard (the pre-rebalancing invariant)."""
+
+    name = "keep_local"
+
+    def assign(self, origins, base_load, shards):
+        return np.asarray(origins, np.int64)
+
+
+class RoundRobinPlacement(PlacementPolicy):
+    """Deal rows over shards in order, ignoring load and origin."""
+
+    name = "round_robin"
+
+    def assign(self, origins, base_load, shards):
+        k = len(np.asarray(origins))
+        return np.arange(k, dtype=np.int64) % int(shards)
+
+
+class LoadBalancePlacement(PlacementPolicy):
+    """Water-fill to the per-shard quota that minimizes max live load,
+    keeping rows local whenever their origin shard has quota left (so
+    movement is the minimum the quota permits)."""
+
+    name = "load_balance"
+
+    def assign(self, origins, base_load, shards):
+        origins = np.asarray(origins, np.int64)
+        k = len(origins)
+        quota = water_fill_counts(base_load, k)
+        targets = np.empty(k, np.int64)
+        leftovers: List[int] = []
+        for s in range(int(shards)):
+            rows_s = np.nonzero(origins == s)[0]
+            take = min(len(rows_s), int(quota[s]))
+            targets[rows_s[:take]] = s
+            quota[s] -= take
+            leftovers.extend(rows_s[take:].tolist())
+        if leftovers:
+            fill = np.repeat(np.arange(int(shards)), quota)
+            targets[np.asarray(leftovers, np.int64)] = fill
+        return targets
+
+
+_PLACEMENTS = {p.name: p for p in (KeepLocalPlacement, RoundRobinPlacement,
+                                   LoadBalancePlacement)}
+
+
+def make_placement_policy(spec: Union[str, PlacementPolicy, None]
+                          ) -> PlacementPolicy:
+    """Resolve a placement spec: a policy instance passes through, a
+    name (``keep_local`` / ``round_robin`` / ``load_balance``) or None
+    (-> ``keep_local``) constructs the built-in."""
+    if spec is None:
+        return KeepLocalPlacement()
+    if isinstance(spec, PlacementPolicy):
+        return spec
+    try:
+        return _PLACEMENTS[spec]()
+    except KeyError:
+        raise ValueError(
+            f"unknown placement policy {spec!r}; "
+            f"expected one of {sorted(_PLACEMENTS)}") from None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +261,7 @@ class CompactionStats:
     total_seconds: float = 0.0  # cumulative wall-clock spent compacting
     rows_dropped: int = 0       # tombstoned rows reclaimed, cumulative
     rows_frozen: int = 0
+    rows_moved: int = 0         # rows rebalanced across shards at merges
     steps: int = 0              # compact_step() calls that advanced a merge
     last_merge_steps: int = 0   # steps the most recent merge took
     merges_per_level: Dict[int, int] = dataclasses.field(
@@ -129,16 +285,19 @@ class CompactionStats:
 
     def record_merge(self, level: int, rows: int, steps: int,
                      seconds: float, dropped: int,
-                     reason: str = "merge") -> None:
+                     reason: str = "merge", moved: int = 0) -> None:
         """``seconds`` is the merge's accumulated *work* time (the sum of
         its compact_step durations) — not schedule-to-swap wall clock,
         which under budgeted mode would count all the serving time
-        interleaved between steps as time spent compacting."""
+        interleaved between steps as time spent compacting.  ``moved``
+        counts rows whose placement target differed from their origin
+        shard (always 0 on single-host merges)."""
         self.compactions += 1
         self.last_reason = reason
         self.last_seconds = float(seconds)
         self.total_seconds += self.last_seconds
         self.rows_dropped += int(dropped)
+        self.rows_moved += int(moved)
         self.last_merge_steps = int(steps)
         self.merges_per_level[int(level)] = (
             self.merges_per_level.get(int(level), 0) + 1)
@@ -153,6 +312,7 @@ class CompactionStats:
                 "total_seconds": self.total_seconds,
                 "rows_dropped": self.rows_dropped,
                 "rows_frozen": self.rows_frozen,
+                "rows_moved": self.rows_moved,
                 "compact_steps": self.steps,
                 "last_merge_steps": self.last_merge_steps,
                 "merges_per_level": dict(self.merges_per_level),

@@ -60,13 +60,32 @@ _pad_pow2 = _pad_size                # same pow2 padding as the router groups
 
 
 class DynamicHybridIndex:
-    """Streaming Hybrid LSH index: insert / delete / freeze / merge / query."""
+    """Streaming Hybrid LSH index: insert / delete / freeze / merge / query.
+
+    Shape conventions: corpus rows are (n, d); external ids are int64
+    host-side, stored int32 on device; per-row buckets are (n, L) in
+    [0, num_buckets), with *pad rows hashed to bucket num_buckets* —
+    one past the bucket space, dropped exactly by the CSR/HLL
+    reductions — so padded builds and padded query groups stay exact
+    (see ``streaming.segment`` / docs/architecture.md).
+    """
 
     def __init__(self, family, *, num_buckets: int, m: int = 64,
                  cap: int = 64, delta_capacity: int = 4096,
                  cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
                  policy: CompactionPolicy = CompactionPolicy(),
                  key: jax.Array | int = 0, impl: Optional[str] = None):
+        """Args:
+          family: LSH family (``make_family``); owns metric + hashes.
+          num_buckets: buckets per table B.
+          m: HLL registers per bucket.
+          cap: LSH candidate verification cap per (query, table).
+          delta_capacity: delta slots before a freeze.
+          cost_model: Algorithm 2 cost constants (alpha, beta).
+          policy: freeze/merge triggers (``CompactionPolicy``).
+          key: PRNG key (or int seed) for the family parameters.
+          impl: kernel impl override (e.g. ``"pallas_interpret"``).
+        """
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
         self.family = family
@@ -119,7 +138,11 @@ class DynamicHybridIndex:
     # ------------------------------------------------------------- build
     def build(self, x: jax.Array,
               ids: Optional[Sequence[int]] = None) -> "DynamicHybridIndex":
-        """Initial batch build (Algorithm 1); ``ids`` default to 0..n-1."""
+        """Initial batch build (Algorithm 1); returns self.
+
+        Args: ``x`` (n, d) corpus rows; ``ids`` optional (n,) unique
+        external ids (default 0..n-1).  Replaces any existing state.
+        """
         x = np.asarray(x)
         if ids is None:
             ids = np.arange(x.shape[0], dtype=np.int64)
@@ -157,8 +180,10 @@ class DynamicHybridIndex:
     # ------------------------------------------------------------ insert
     def insert(self, rows: jax.Array,
                ids: Optional[Sequence[int]] = None) -> np.ndarray:
-        """Append documents; returns their external ids.
+        """Append documents; returns their external ids as (k,) int64.
 
+        Args: ``rows`` (k, d); ``ids`` optional (k,) unused external ids
+        (KeyError on duplicates), default continues the running counter.
         Splits the batch by remaining delta capacity, freezing the delta
         into a level-0 segment between chunks when it fills — inserts
         never wait on a rebuild of older data.
@@ -416,8 +441,15 @@ class DynamicHybridIndex:
               num_probes: int = 1) -> QueryResult:
         """Hybrid r-NN reporting over the whole stack; ids are external.
 
-        ``num_probes > 1`` probes the Lv et al. perturbation buckets in
-        every frozen level AND the delta (SimHash families only).
+        Args:
+          queries: (Q, d) rows in the corpus metric space.
+          r: report radius — every returned neighbor has dist <= r.
+          force: None (hybrid) | "lsh" | "linear" strategy override.
+          num_probes: > 1 probes the Lv et al. perturbation buckets in
+            every frozen level AND the delta (SimHash families only).
+
+        Returns a ``QueryResult`` (see ``core.engine``): per-strategy
+        sentinel-padded buffers plus the ``RouteEstimate`` diagnostics.
         """
         assert self.delta is not None, "index is empty: build/insert first"
         queries = jnp.asarray(queries)
@@ -427,6 +459,10 @@ class DynamicHybridIndex:
 
     # ------------------------------------------------------ observability
     def index_stats(self) -> Dict[str, object]:
+        """Size/level/compaction counters snapshot (host ints/dicts):
+        ``n_live``/``n_main``/``n_main_dead``, delta fill, segment and
+        per-level counts, pending merges, and every cumulative
+        ``CompactionStats`` counter (freezes, merges_per_level, ...)."""
         out = {
             "n_live": self.n,
             "n_main": self.stack.n_rows,

@@ -182,7 +182,13 @@ class MergeResult:
 
 
 class SegmentStack:
-    """The frozen half of a streaming index: level list + merge queue."""
+    """The frozen half of a streaming index: level list + merge queue.
+
+    Owns only structure — *which* immutable segments exist, at what
+    level, and what merge work is pending.  The index above it owns the
+    delta, the tombstone writes, the external-id location map, and the
+    decision of *when* to schedule (``CompactionPolicy``).
+    """
 
     def __init__(self) -> None:
         self.segments: List[FrozenSegment] = []
@@ -191,14 +197,18 @@ class SegmentStack:
 
     # ------------------------------------------------------------- intro
     def next_uid(self) -> int:
+        """Allocate a stack-unique segment id (stable across merges of
+        other segments; never reused)."""
         u = self._next_uid
         self._next_uid += 1
         return u
 
     def add(self, seg: FrozenSegment) -> None:
+        """Append a frozen segment to the level list."""
         self.segments.append(seg)
 
     def by_uid(self, uid: int) -> FrozenSegment:
+        """The segment with this uid; KeyError once it merged away."""
         for s in self.segments:
             if s.uid == uid:
                 return s
@@ -207,27 +217,33 @@ class SegmentStack:
     # ------------------------------------------------------------- sizes
     @property
     def n_rows(self) -> int:
+        """Real frozen rows: tombstoned included, pad rows excluded."""
         return sum(s.n_rows for s in self.segments)
 
     @property
     def n_live(self) -> int:
+        """Frozen rows not tombstoned."""
         return sum(s.n_live for s in self.segments)
 
     @property
     def n_dead(self) -> int:
+        """Tombstoned frozen rows (reclaimed at the next merge)."""
         return self.n_rows - self.n_live
 
     def level_counts(self) -> Dict[int, int]:
+        """level -> #segments, the ``CompactionPolicy`` trigger input."""
         out: Dict[int, int] = {}
         for s in self.segments:
             out[s.level] = out.get(s.level, 0) + 1
         return out
 
     def pending_uids(self) -> set:
+        """Uids that are inputs of a queued merge (can't re-schedule)."""
         return {u for t in self.tasks for u in t.uids}
 
     @property
     def has_work(self) -> bool:
+        """True while any merge is queued (``compact_step`` will act)."""
         return bool(self.tasks)
 
     # --------------------------------------------------------- scheduling

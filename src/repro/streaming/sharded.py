@@ -30,6 +30,18 @@ level's entries into the next level; merges are staged in bounded
 swaps in atomically — queries keep being served from the old level
 list until then.
 
+A merge is also the one point rows *move between shards*: the staged
+survivors are host-side anyway, so at swap time a pluggable
+``PlacementPolicy`` (``keep_local`` / ``round_robin`` /
+``load_balance``; see ``streaming.compaction``) assigns each surviving
+row a target shard, the staging buffers are re-partitioned
+accordingly, and ``_make_level`` rewrites the ``_loc`` entry of every
+placed row.  The mid-merge delete re-check runs *before* placement, so
+a row deleted while staged is dropped, never moved.  Rebalancing is
+what keeps a skewed insert stream (e.g. ``insert(..., shard=0)``) from
+pinning one shard's row count — and with it the common per-level
+``n_pad`` every shard pays for — permanently high.
+
 Queries run one ``shard_map`` per level structure: each shard builds
 its engine segments (one ``TableSegment`` per level + ``DeltaView``),
 merges ``SegmentEstimate`` terms across shards (``psum`` exact terms,
@@ -59,7 +71,9 @@ from repro.core.lsh.tables import LSHTables, build_tables
 from repro.core import hll as hll_lib
 from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
-from repro.streaming.compaction import CompactionPolicy, CompactionStats
+from repro.streaming.compaction import (CompactionPolicy, CompactionStats,
+                                        PlacementPolicy,
+                                        make_placement_policy)
 
 __all__ = ["ShardedDynamicHybridIndex", "ShardedQueryResult"]
 
@@ -156,9 +170,31 @@ class ShardedDynamicHybridIndex:
                  cap: int = 64, delta_capacity: int = 1024,
                  cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
                  policy: CompactionPolicy = CompactionPolicy(),
+                 placement: "str | PlacementPolicy" = "keep_local",
                  routing: str = "per_shard", max_out: int = 512,
                  data_axis: str = "data", key: jax.Array | int = 0,
                  impl: Optional[str] = None):
+        """Args:
+          family: LSH family (``make_family``); owns metric + hashes.
+          num_buckets: buckets per table B; rows hash into [0, B), pad
+            rows to B (dropped exactly by the CSR/HLL segment reductions).
+          mesh: jax mesh whose ``data_axis`` rows are sharded over.
+          m: HLL registers per bucket.
+          cap: LSH candidate verification cap per (query, table).
+          delta_capacity: per-shard delta slots before a freeze.
+          cost_model: Algorithm 2 cost constants (alpha, beta).
+          policy: when to freeze/merge (``CompactionPolicy``).
+          placement: merge-time row placement across shards —
+            ``"keep_local"`` (default; rows never move),
+            ``"round_robin"``, ``"load_balance"``, or any
+            ``PlacementPolicy`` instance.
+          routing: ``"global"`` (one strategy for the batch) or
+            ``"per_shard"`` (each shard votes with its local estimate).
+          max_out: reported neighbors per (shard, query).
+          data_axis: mesh axis name to shard rows over.
+          key: PRNG key (or int seed) for the family parameters.
+          impl: kernel impl override (e.g. ``"pallas_interpret"``).
+        """
         assert routing in ("global", "per_shard"), routing
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
@@ -170,6 +206,7 @@ class ShardedDynamicHybridIndex:
         self.delta_capacity = int(delta_capacity)
         self.cost_model = cost_model
         self.policy = policy
+        self.placement = make_placement_policy(placement)
         self.routing = routing
         self.max_out = int(max_out)
         self.mesh = mesh
@@ -222,7 +259,12 @@ class ShardedDynamicHybridIndex:
     def build(self, x: jax.Array,
               ids: Optional[Sequence[int]] = None
               ) -> "ShardedDynamicHybridIndex":
-        """Initial batch build; rows round-robin over shards."""
+        """Initial batch build; returns self.
+
+        Args: ``x`` (n, d) corpus rows, dealt round-robin over shards;
+        ``ids`` optional (n,) unique external ids (default 0..n-1).
+        Replaces any existing state.
+        """
         x = np.asarray(x)
         n = x.shape[0]
         if ids is None:
@@ -371,16 +413,29 @@ class ShardedDynamicHybridIndex:
         self._reset_delta()
 
     # ------------------------------------------------------------ insert
-    def insert(self, rows: jax.Array,
-               ids: Optional[Sequence[int]] = None) -> np.ndarray:
-        """Append documents to the least-loaded shard deltas.
+    def insert(self, rows: jax.Array, ids: Optional[Sequence[int]] = None,
+               shard: Optional[int] = None) -> np.ndarray:
+        """Append documents to the shard deltas; returns external ids.
+
+        Args:
+          rows: (k, d) new document rows.
+          ids: optional (k,) external ids (must be unused); default
+            continues from the running counter.
+          shard: pin the whole batch to one shard's delta (models
+            key-hash placement; how skewed streams arise).  Default
+            None water-fills the least-loaded deltas.
 
         Splits the batch by remaining per-shard delta capacity, freezing
-        every shard's delta into a new level-0 entry when all fill.
+        every shard's delta into a new level-0 entry when the target
+        shard(s) fill.  A pinned skewed stream piles rows onto one
+        shard; merge-time rebalancing (``placement``) is what spreads
+        them back out.
         """
         rows = np.asarray(rows)
         if rows.shape[0] == 0:
             return np.zeros((0,), np.int64)
+        if shard is not None and not 0 <= int(shard) < self.shards:
+            raise ValueError(f"shard {shard} not in [0, {self.shards})")
         self._ensure_init(rows)
         if ids is None:
             ids = np.arange(self._next_id, self._next_id + rows.shape[0],
@@ -395,9 +450,14 @@ class ShardedDynamicHybridIndex:
         lo = 0
         while lo < rows.shape[0]:
             free = self.delta_capacity - self._delta_count_s
+            if shard is not None:
+                # pinned: only the target shard's capacity counts
+                pin = np.zeros_like(free)
+                pin[int(shard)] = free[int(shard)]
+                free = pin
             if free.sum() == 0:
                 self._freeze("delta_full")
-                free = self.delta_capacity - self._delta_count_s
+                continue
             take = int(min(free.sum(), rows.shape[0] - lo))
             # round-robin water-fill over shards with free slots
             order = np.argsort(self._delta_count_s, kind="stable")
@@ -405,7 +465,8 @@ class ShardedDynamicHybridIndex:
             left, cursor = take, 0
             free = free.copy()
             while left:
-                s = int(order[cursor % self.shards])
+                s = (int(shard) if shard is not None
+                     else int(order[cursor % self.shards]))
                 cursor += 1
                 if free[s] > len(assign[s]):
                     assign[s].append(lo + take - left)
@@ -465,7 +526,13 @@ class ShardedDynamicHybridIndex:
 
     # ------------------------------------------------------------ delete
     def delete(self, ids: Iterable[int], strict: bool = False) -> int:
-        """Tombstone documents by external id; returns #removed."""
+        """Tombstone documents by external id; returns #removed.
+
+        Unknown (or already-deleted) ids are skipped unless ``strict``
+        (KeyError).  Deletes mark per-(shard, level) live bitmaps and
+        bump per-bucket dead counts; tables are never mutated, and a
+        row staged in a pending merge is dropped at swap time.
+        """
         S = self.shards
         by_uid: Dict[int, List[List[int]]] = {}
         delta_slots: List[List[int]] = [[] for _ in range(S)]
@@ -640,11 +707,11 @@ class ShardedDynamicHybridIndex:
             if not task.staged_done:
                 task.work_seconds += time.perf_counter() - t0
                 return True
-        total, dropped = self._finalize_merge(task)
+        total, dropped, moved = self._finalize_merge(task)
         task.work_seconds += time.perf_counter() - t0
         self.stats.record_merge(task.target_level, total, task.steps,
                                 task.work_seconds, dropped,
-                                reason=task.reason)
+                                reason=task.reason, moved=moved)
         self._schedule_merges()       # cascade up the levels
         return bool(self._tasks)
 
@@ -674,36 +741,60 @@ class ShardedDynamicHybridIndex:
             left -= hi - task.row_off
             task.row_off = hi
 
-    def _finalize_merge(self, task: _ShardMergeTask) -> Tuple[int, int]:
+    def _finalize_merge(self, task: _ShardMergeTask) -> Tuple[int, int, int]:
+        """Swap the staged merge in; returns (rows kept, dropped, moved).
+
+        Order matters: (1) re-check every staged row against the
+        *current* live bitmap — deletes that landed mid-merge must not
+        resurrect; (2) hand the survivors (with their origin shards) to
+        the placement policy; (3) re-partition the staging buffers by
+        target shard and build the new level, whose ``_make_level``
+        rewrites ``_loc`` for every row — moved rows included — before
+        the old levels' entries are forgotten.
+        """
         S = self.shards
-        keep: List[List[tuple]] = [[] for _ in range(S)]
+        surv: List[tuple] = []   # (origin shard, rows, ids, bids)
         for (uid, s, idx), rows, ids, bids in zip(task.src, task.rows,
                                                   task.ids, task.bids):
-            # deletes that landed mid-merge must not resurrect: re-check
-            # staged rows against the *current* live bitmap at swap time
             live = np.asarray(self._level_by_uid(uid).leaves["live"][s])[idx]
             if live.any():
-                keep[s].append((rows[live], ids[live], bids[live]))
+                surv.append((s, rows[live], ids[live].astype(np.int64),
+                             bids[live]))
         total_in = sum(self._level_by_uid(u).n_rows for u in task.uids)
         self._tasks.pop(0)
         self._levels = [l for l in self._levels if l.uid not in task.uids]
-        parts, total = [], 0
-        for s in range(S):
-            if keep[s]:
-                xs = np.concatenate([c[0] for c in keep[s]], axis=0)
-                es = np.concatenate([c[1] for c in keep[s]]).astype(np.int64)
-                bs = np.concatenate([c[2] for c in keep[s]], axis=0)
-            else:
-                xs = np.zeros((0, self._d), self._dtype)
-                es = np.zeros((0,), np.int64)
-                bs = np.zeros((0, self.family.L), np.int32)
-            parts.append((xs, es, bs))
-            total += len(es)
-        if total:
-            self._make_level(parts, level=task.target_level)
-        else:
+        if not surv:
             self._evict_stale_query_fns()
-        return total, total_in - total
+            return 0, total_in, 0
+        origins = np.concatenate(
+            [np.full(len(c[2]), c[0], np.int64) for c in surv])
+        xs = np.concatenate([c[1] for c in surv], axis=0)
+        es = np.concatenate([c[2] for c in surv])
+        bs = np.concatenate([c[3] for c in surv], axis=0)
+        # base load: live rows per shard outside this merge (surviving
+        # levels — other pending merges' inputs included, they keep
+        # their shard until their own swap — plus the delta); the merged
+        # levels are already dropped from _levels, so shard_loads() is
+        # exactly this base
+        base = self.shard_loads()
+        targets = np.asarray(
+            self.placement.assign(origins, base, S), np.int64)
+        # hard-validate the public extension point: a buggy custom
+        # policy must fail the merge loudly, not silently drop rows
+        # whose _loc entries would then dangle
+        if targets.shape != origins.shape or not (
+                (0 <= targets) & (targets < S)).all():
+            raise ValueError(
+                f"placement policy {self.placement.name!r} returned bad "
+                f"targets (shape {targets.shape}, expected "
+                f"{origins.shape}, values must be in [0, {S}))")
+        moved = int((targets != origins).sum())
+        parts = []
+        for s in range(S):
+            sel = targets == s
+            parts.append((xs[sel], es[sel], bs[sel]))
+        self._make_level(parts, level=task.target_level)
+        return len(es), total_in - len(es), moved
 
     def _drain(self) -> None:
         while self._tasks:
@@ -749,7 +840,17 @@ class ShardedDynamicHybridIndex:
     # ------------------------------------------------------------- query
     def query(self, queries: jax.Array, r: float,
               force: Optional[str] = None) -> ShardedQueryResult:
-        """Hybrid r-NN reporting, union over shards; ids are external."""
+        """Hybrid r-NN reporting, union over shards; ids are external.
+
+        Args:
+          queries: (Q, d) rows, replicated to every shard.
+          r: report radius — every returned neighbor has dist <= r.
+          force: None (hybrid routing) | "lsh" | "linear" override.
+
+        Returns a ``ShardedQueryResult`` with (S, Q, max_out) reporting
+        buffers (union over the shard axis; ``neighbors(i)`` flattens
+        it) plus global routing diagnostics.
+        """
         assert self._delta is not None, "index is empty: build/insert first"
         queries = jnp.asarray(queries)
         d = self._delta
@@ -858,11 +959,71 @@ class ShardedDynamicHybridIndex:
         return fn
 
     # ------------------------------------------------------ observability
+    def shard_of(self, ext_id: int) -> int:
+        """Shard currently holding a live document (KeyError if absent).
+
+        The answer is only stable until the next merge: rebalancing may
+        move the row at swap time.
+        """
+        return self._loc[int(ext_id)][0]
+
+    def validate_locations(self) -> int:
+        """Debug invariant check: every ``_loc`` entry resolves to a live
+        row whose stored external id matches, and every live device row
+        is reachable.  Returns the number of live rows checked; raises
+        AssertionError on any inconsistency.  Host-side and O(n) — for
+        tests and debugging, not the serving path."""
+        n_checked = 0
+        # snapshot device arrays once: per-element jax indexing would
+        # pay one device round-trip per live row
+        by_uid = {l.uid: (l, np.asarray(l.leaves["live"]),
+                          np.asarray(l.leaves["ids"]))
+                  for l in self._levels}
+        d_live = np.asarray(self._delta["live"]) if self._delta else None
+        d_ids = np.asarray(self._delta["ids"]) if self._delta else None
+        for e, loc in self._loc.items():
+            s, kind = loc[0], loc[1]
+            if kind == "m":
+                uid, row = loc[2], loc[3]
+                entry = by_uid.get(uid)
+                assert entry is not None, (e, loc, "level gone")
+                lvl, live, ids = entry
+                assert row < int(lvl.rows_s[s]), (e, loc, "row out of range")
+                assert bool(live[s, row]), (e, loc, "dead row")
+                assert int(ids[s, row]) == e, (e, loc, "id mismatch")
+            else:
+                slot = loc[2]
+                assert bool(d_live[s, slot]), (e, loc, "dead")
+                assert int(d_ids[s, slot]) == e, (e, loc, "id mismatch")
+            n_checked += 1
+        total_live = (sum(l.n_live for l in self._levels)
+                      + int(self._delta_live_s.sum()))
+        assert n_checked == total_live, (n_checked, total_live)
+        return n_checked
+
+    def shard_loads(self) -> np.ndarray:
+        """(S,) live rows per shard (levels + delta)."""
+        loads = self._delta_live_s.copy()
+        for l in self._levels:
+            loads += l.live_s
+        return loads
+
     def index_stats(self) -> Dict[str, object]:
+        """Size/level/compaction counters snapshot (host ints/lists).
+
+        Adds the sharded extras to the single-host set: per-shard live
+        and delta loads, ``placement``, ``rows_moved`` (cumulative rows
+        rebalanced at merges) and ``shard_skew`` = max/mean live load —
+        1.0 is perfectly balanced; keep_local under a skewed stream
+        grows it toward S.
+        """
         S = self.shards
         live_per_shard = np.zeros(S, np.int64)
         for l in self._levels:
             live_per_shard += l.live_s
+        loads = live_per_shard + self._delta_live_s
+        skew = (float(loads.max() / loads.mean())
+                if loads.sum() else 1.0)
         levels: Dict[int, int] = {}
         for l in self._levels:
             levels[l.level] = levels.get(l.level, 0) + 1
@@ -880,6 +1041,8 @@ class ShardedDynamicHybridIndex:
             "pending_merges": len(self._tasks),
             "live_per_shard": live_per_shard.tolist(),
             "delta_per_shard": self._delta_count_s.tolist(),
+            "shard_skew": skew,
+            "placement": self.placement.name,
             "routing": self.routing,
             "inserts": self._inserts,
             "deletes": self._deletes,
@@ -896,7 +1059,10 @@ class ShardedDynamicHybridIndex:
         level list varies, so restore goes through the manifest-driven
         ``CheckpointManager.restore_index`` (no template).  Staged merge
         progress is volatile — inputs are still complete levels, so a
-        restore loses no data and the policy re-schedules.
+        restore loses no data and the policy re-schedules.  Rebalanced
+        level layouts round-trip exactly (per-shard ``rows_s``/``live_s``
+        ride in each level's meta), and the placement policy name rides
+        in the top-level meta so a restored index keeps rebalancing.
         """
         S, L = self.shards, self.family.L
         levels: Dict[str, Dict] = {}
@@ -923,7 +1089,10 @@ class ShardedDynamicHybridIndex:
             "delta": delta,
             "meta": {"next_id": np.int64(self._next_id),
                      "built": np.int64(0 if self._delta is None else 1),
-                     "next_uid": np.int64(self._next_uid)},
+                     "next_uid": np.int64(self._next_uid),
+                     # 0-d unicode array: np.save round-trips it, and a
+                     # restored index keeps rebalancing the same way
+                     "placement": np.array(self.placement.name)},
         }
 
     def load_state_dict(self, state) -> "ShardedDynamicHybridIndex":
@@ -935,6 +1104,15 @@ class ShardedDynamicHybridIndex:
         self._tasks = []
         self._next_id = int(np.asarray(state["meta"]["next_id"]))
         self._next_uid = int(np.asarray(state["meta"].get("next_uid", 0)))
+        pl = state["meta"].get("placement")
+        if pl is not None:      # pre-rebalancing checkpoints: keep ctor's
+            try:
+                self.placement = make_placement_policy(str(np.asarray(pl)))
+            except ValueError:
+                # custom PlacementPolicy subclass: only its name is
+                # saved, so the restored index keeps the constructor's
+                # policy (construct with the custom policy to restore it)
+                pass
         if int(np.asarray(state["meta"]["built"])) == 0:
             self._levels, self._delta = [], None
             self._loc = {}

@@ -179,6 +179,111 @@ print("LSM_OK")
     assert "LSM_OK" in out
 
 
+def test_rebalance_churn_equivalence():
+    """Skewed insert stream (every batch pinned to shard 0) under
+    round_robin and load_balance placement: rows move between shards at
+    every merge, yet reported neighbor sets match a fresh single-host
+    build at EVERY intermediate compaction state — mid-merge deletes
+    included — and the _loc map stays consistent (every ext id resolves
+    to a live device row with the matching stored id) after each step."""
+    out = _run(_COMMON + r"""
+lsm = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0, fanout=2,
+                       step_rows=64)
+for placement in ("round_robin", "load_balance"):
+    sh = ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                                   cap=CAP, delta_capacity=64,
+                                   policy=lsm, routing="per_shard",
+                                   max_out=900, key=0,
+                                   placement=placement)
+    sh.build(x[:128])
+    sh.insert(x[128:500], shard=0)      # the skewed stream
+    assert sh.has_compaction_work
+    sh.validate_locations()
+    live3 = np.ones(900, bool); live3[500:] = False
+    def check(note):
+        ids = np.nonzero(live3)[0]
+        f3 = DynamicHybridIndex(fam, num_buckets=B, m=M, cap=CAP, key=0,
+                                delta_capacity=512, policy=NO_AUTO)
+        f3.build(x[live3], ids=ids)
+        for force in ("lsh", "linear"):
+            got = sh.query(q, R, force=force).neighbor_sets()
+            want3 = f3.query(q, R, force=force).neighbor_sets()
+            assert got == want3, (placement, note, force)
+    check("pre-step")
+    sh.compact_step(64)                 # stage part of a merge
+    sh.validate_locations()
+    dead = list(range(0, 450, 7))       # staged + unstaged + delta rows
+    assert sh.delete(dead) == len(dead)
+    live3[dead] = False
+    sh.validate_locations()
+    check("deleted-mid-merge")
+    steps = 0
+    while sh.compact_step(96):          # every intermediate state
+        sh.validate_locations()
+        check("step-%d" % steps)
+        steps += 1
+    sh.validate_locations()
+    check("drained")
+    st = sh.index_stats()
+    assert st["rows_moved"] > 0, (placement, st)
+    assert st["placement"] == placement, st
+    if placement == "load_balance":
+        assert st["shard_skew"] < 1.5, st
+    print("REBALANCE_OK", placement, st["rows_moved"],
+          round(st["shard_skew"], 3))
+print("ALL_OK")
+""")
+    assert "ALL_OK" in out
+    assert out.count("REBALANCE_OK") == 2
+
+
+def test_rebalance_checkpoint_roundtrip(tmp_path):
+    """Placement policy + rebalanced (moved-row) level layouts survive a
+    save/restore; the restored index keeps rebalancing."""
+    out = _run(_COMMON + rf"""
+from repro.checkpoint import CheckpointManager
+
+lsm = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0, fanout=2,
+                       step_rows=64)
+def mk(placement):
+    return ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=mesh, m=M,
+                                     cap=CAP, delta_capacity=64,
+                                     policy=lsm, routing="per_shard",
+                                     max_out=900, key=0,
+                                     placement=placement)
+sh = mk("load_balance")
+sh.build(x[:128])
+sh.insert(x[128:500], shard=0)
+while sh.compact_step(128):
+    pass
+st = sh.index_stats()
+assert st["rows_moved"] > 0, st
+mgr = CheckpointManager({str(tmp_path)!r})
+mgr.save_index(7, sh)
+
+restored = mk("keep_local")     # ctor arg loses to the checkpoint
+assert mgr.restore_index(restored) == 7
+assert restored.placement.name == "load_balance"
+restored.validate_locations()
+b = restored.index_stats()
+for key in ("n_live", "n_main", "segments", "levels", "live_per_shard",
+            "delta_per_shard", "shard_skew"):
+    assert st[key] == b[key], key
+for f in ("lsh", "linear"):
+    assert (restored.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+# keeps streaming AND keeps rebalancing after restore
+restored.insert(x[500:700], shard=0)
+while restored.compact_step(128):
+    pass
+restored.validate_locations()
+assert restored.index_stats()["rows_moved"] > 0
+assert restored.index_stats()["shard_skew"] < 1.5
+print("REBAL_CKPT_OK")
+""")
+    assert "REBAL_CKPT_OK" in out
+
+
 def test_sharded_checkpoint_mid_merge(tmp_path):
     """Save -> restore a sharded stack mid-merge: query-set equality
     with the live index; the restored index re-derives its merge

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Fail on broken relative links in markdown files.
+
+    python tools/check_links.py README.md docs
+
+Each argument is a markdown file or a directory scanned for ``*.md``.
+Checks every inline ``[text](target)`` whose target is not an absolute
+URL (``http(s)://``, ``mailto:``) or a pure in-page anchor (``#...``):
+the referenced path must exist relative to the file's directory.
+Fragments are checked when the target file is markdown: ``page.md#some
+-heading`` must match a heading slug (GitHub-style: lowercase, spaces
+to dashes, punctuation dropped) in the target file.  Exits non-zero
+listing every broken link.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from pathlib import Path
+
+_LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def _slug(heading: str) -> str:
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def _anchors(md: Path) -> set:
+    out = set()
+    in_fence = False
+    for line in md.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence and line.startswith("#"):
+            out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks: example links in code aren't contracts
+    lines, in_fence, kept = text.splitlines(), False, []
+    for line in lines:
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            kept.append(line)
+    for target in _LINK.findall("\n".join(kept)):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if not path_part:        # in-page anchor: check against self
+            if _slug(frag) not in _anchors(md):
+                errors.append(f"{md}: broken anchor ({target})")
+            continue
+        dest = (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md}: broken link ({target})")
+        elif frag and dest.suffix == ".md":
+            if _slug(frag) not in _anchors(dest):
+                errors.append(f"{md}: broken fragment ({target})")
+    return errors
+
+
+def main(argv: list) -> int:
+    files: list = []
+    for a in argv:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path {a}", file=sys.stderr)
+            return 2
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] or ["README.md", "docs"]))
