@@ -26,6 +26,8 @@ def main() -> None:
                          "bench, --emit BENCH_sharded.json the mesh-sharded "
                          "one (>= 2 host devices forced), --emit "
                          "BENCH_lsm.json the LSM compaction-stall bench, "
+                         "--emit BENCH_async.json the serving-thread stall "
+                         "comparison (tick-based vs async CompactionDriver), "
                          "--emit BENCH_rebalance.json the skewed-stream "
                          "placement comparison (>= 2 host devices forced). "
                          "Skips the paper tables")
@@ -79,6 +81,28 @@ def main() -> None:
               f"{rows['query_batch_s_per_shard'] / max(rows['query_batch_s_global'], 1e-12):.2f}x global "
               f"(after compact: "
               f"{rows['query_batch_s_after_compact'] / max(rows['query_batch_s_global'], 1e-12):.2f}x)")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "async" in os.path.basename(args.emit):
+        from benchmarks import lsm_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = lsm_bench.async_main(scale, emit=args.emit)
+        print(f"async_serving_maint_tick,"
+              f"{1e6 * rows['serving_maint_s_tick']:.1f},"
+              f"serving-thread compaction s over {rows['rounds']} rounds "
+              f"(budgeted ticks)")
+        print(f"async_serving_maint_driver,"
+              f"{1e6 * rows['serving_maint_s_driver']:.1f},"
+              f"driver drain() only; {rows['driver_stage_calls']} gathers "
+              f"on the worker, {rows['driver_applied']} swaps applied")
+        print(f"async_serving_stall_cut,{0:.1f},"
+              f"{rows['serving_stall_cut']:.1f}x less serving-thread "
+              f"compaction time; round p99 "
+              f"{1e3 * rows['driver_round_p99_s']:.1f}ms vs "
+              f"{1e3 * rows['tick_round_p99_s']:.1f}ms tick")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

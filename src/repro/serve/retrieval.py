@@ -11,6 +11,12 @@ otherwise the single-host ``DynamicHybridIndex`` serves.  Either way
 every retrieval request goes through the paper's Algorithm 2 via the
 shared segment engine, with the tombstone-corrected estimate.
 ``stats`` exposes routing decisions and compaction counters.
+
+Compaction modes (docs/compaction.md): synchronous drain (default),
+budgeted ticks (``compact_step_rows`` set; ``compaction_tick`` between
+batches), or fully async (``async_compaction=True``; the service owns
+a ``CompactionDriver`` whose worker thread stages merges while the
+serving thread only drains staged swaps).
 """
 from __future__ import annotations
 
@@ -27,7 +33,8 @@ from repro.core import CostModel
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
-from repro.streaming import (CompactionPolicy, DynamicHybridIndex,
+from repro.streaming import (CompactionDriver, CompactionPolicy,
+                             DynamicHybridIndex,
                              ShardedDynamicHybridIndex)
 
 
@@ -49,6 +56,13 @@ class RetrievalConfig:
     # steps (RetrievalService ticks them between batches).
     compact_fanout: int = 4
     compact_step_rows: Optional[int] = None
+    # Async compaction: a CompactionDriver worker thread runs the merge
+    # staging gathers continuously; the serving thread's tick becomes a
+    # cheap drain() that only applies fully-staged atomic swaps (plus
+    # their loc rewrites), so no gather ever lands on the serving
+    # thread.  compact_step_rows doubles as the worker's per-gather
+    # budget (default delta_capacity // 2 when unset and async is on).
+    async_compaction: bool = False
     # Mesh sharding: set to shard the corpus over `mesh_axis`.
     mesh: Optional[Mesh] = None
     mesh_axis: str = "data"
@@ -71,6 +85,15 @@ class RetrievalService:
     request batch, ``compaction_tick`` advances merge work off the
     query path, and ``stats`` exposes routing + compaction +
     rebalancing counters.
+
+    With ``RetrievalConfig.async_compaction`` the service owns a
+    ``CompactionDriver``: merge staging runs on the driver's worker
+    thread, ``compaction_tick`` degenerates to the driver's cheap
+    ``drain()`` (apply any fully-staged atomic swap), and
+    ``checkpoint`` flushes the driver first so a snapshot never
+    captures a half-staged merge.  All ``RetrievalService`` methods are
+    control-thread-only — the only concurrency is the driver's worker,
+    which the service manages (``shutdown`` stops it).
     """
 
     def __init__(self, cfg: ArchConfig, par: ParallelConfig, params,
@@ -80,9 +103,11 @@ class RetrievalService:
             lambda p, b: forward_embed(p, b, cfg, par))
         self.index: Optional[Union[DynamicHybridIndex,
                                    ShardedDynamicHybridIndex]] = None
+        self.driver: Optional[CompactionDriver] = None
         self._queries_served = 0
         self._linear_served = 0
         self._compaction_ticks = 0
+        self._idle_ticks = 0
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Normalized (B, d_model) embeddings for one token batch."""
@@ -92,10 +117,24 @@ class RetrievalService:
         embs = [np.asarray(self.embed(b)) for b in batches]
         return jnp.asarray(np.concatenate(embs, axis=0))
 
+    def _step_rows(self) -> Optional[int]:
+        """Merge-step budget: the configured step_rows; async mode must
+        not fall back to the synchronous drain (step_rows=None), so it
+        defaults to half the delta capacity."""
+        r = self.rcfg
+        if r.compact_step_rows is None and r.async_compaction:
+            return max(r.delta_capacity // 2, 1)
+        return r.compact_step_rows
+
     def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
         """Embed + build the corpus index per ``RetrievalConfig`` (mesh
         set -> sharded index with the configured routing/placement);
-        returns the corpus size."""
+        returns the corpus size.  With ``async_compaction`` a
+        ``CompactionDriver`` is started on the new index (any previous
+        driver is stopped first)."""
+        if self.driver is not None:
+            self.driver.stop()
+            self.driver = None
         corpus = self._embed_corpus(batches)
         r = self.rcfg
         fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
@@ -108,7 +147,7 @@ class RetrievalService:
                 delta_fill=r.compact_delta_fill,
                 tombstone_ratio=r.compact_tombstone_ratio,
                 fanout=r.compact_fanout,
-                step_rows=r.compact_step_rows))
+                step_rows=self._step_rows()))
         if r.mesh is not None:
             self.index = ShardedDynamicHybridIndex(
                 fam, mesh=r.mesh, data_axis=r.mesh_axis,
@@ -117,6 +156,9 @@ class RetrievalService:
         else:
             self.index = DynamicHybridIndex(fam, **common)
         self.index.build(corpus)
+        if r.async_compaction:
+            self.driver = CompactionDriver(
+                self.index, budget_rows=self._step_rows()).start()
         return corpus.shape[0]
 
     # ------------------------------------------------------- live mutation
@@ -128,12 +170,18 @@ class RetrievalService:
         folds them into the main segment per the configured policy.
         """
         assert self.index is not None, "call index_corpus first"
-        return self.index.insert(self._embed_corpus(batches))
+        ids = self.index.insert(self._embed_corpus(batches))
+        if self.driver is not None:
+            self.driver.notify()      # a freeze may have queued a merge
+        return ids
 
     def remove_documents(self, doc_ids: Sequence[int]) -> int:
         """Tombstone documents by id; returns #removed."""
         assert self.index is not None, "call index_corpus first"
-        return self.index.delete(doc_ids)
+        removed = self.index.delete(doc_ids)
+        if self.driver is not None:
+            self.driver.notify()      # tombstone pressure may queue work
+        return removed
 
     def query(self, batch: Dict[str, jax.Array],
               radius: Optional[float] = None):
@@ -154,14 +202,67 @@ class RetrievalService:
         return res, q
 
     def compaction_tick(self) -> bool:
-        """Advance pending LSM merge work by one bounded step (the
-        off-query-path hook: wire it as ``ShapeBucketScheduler``'s
-        ``background_tick``, or call it between batches).  Returns True
-        while more compaction work remains."""
+        """The between-batches maintenance hook (wire it as
+        ``ShapeBucketScheduler``'s ``background_tick``).  Budgeted mode:
+        advance pending merge work by one bounded ``compact_step``.
+        Async mode: the driver's cheap ``drain()`` — apply any
+        fully-staged atomic swap; the gathers live on the worker.
+        Returns True while more compaction work remains.
+
+        ``stats["compaction_ticks"]`` counts only ticks that actually
+        ran work (a step that advanced a merge, or a drain that applied
+        a swap); no-op ticks land in ``stats["idle_ticks"]``.
+        """
         if self.index is None:
             return False
-        self._compaction_ticks += 1
-        return bool(self.index.compact_step(self.rcfg.compact_step_rows))
+        if self.driver is not None:
+            if self.driver.drain() > 0:
+                self._compaction_ticks += 1
+            else:
+                self._idle_ticks += 1
+            return bool(self.index.has_compaction_work)
+        if self.index.has_compaction_work:
+            self._compaction_ticks += 1
+        else:
+            self._idle_ticks += 1
+        return bool(self.index.compact_step(self._step_rows()))
+
+    # ------------------------------------------------- driver lifecycle
+    def checkpoint(self, manager, step: int) -> None:
+        """Flush pending merge work, then snapshot the index.
+
+        The flush is the async-mode checkpoint barrier: every queued
+        merge finishes (stage remainder + swap) before ``save_index``
+        runs, so the snapshot never captures a half-staged merge and
+        the saved level structure is exactly what queries will see
+        after a restore.  ``manager`` is a ``CheckpointManager``.
+        """
+        assert self.index is not None, "call index_corpus first"
+        if self.driver is not None:
+            self.driver.flush()
+        manager.save_index(step, self.index)
+
+    def restore(self, manager, step: Optional[int] = None):
+        """Restore index state from a committed checkpoint (the index
+        must have been built with the same config).  The driver worker
+        is stopped around the state swap — staging must never run
+        against a stack being replaced — and restarted after; staged
+        progress is volatile by contract, so nothing is lost.  Returns
+        the restored step (None: no committed checkpoint)."""
+        assert self.index is not None, "call index_corpus first"
+        if self.driver is not None:
+            self.driver.stop()
+        restored = manager.restore_index(self.index, step=step)
+        if self.driver is not None:
+            self.driver.start()
+        return restored
+
+    def shutdown(self, flush: bool = True) -> None:
+        """Stop the driver worker; ``flush=True`` (default) completes
+        pending merges inline first so no staging is orphaned.  Safe to
+        call with no driver or repeatedly."""
+        if self.driver is not None:
+            self.driver.stop(flush=flush)
 
     @property
     def stats(self) -> Dict[str, float]:
@@ -173,13 +274,22 @@ class RetrievalService:
         ``live_per_shard``/``delta_per_shard`` loads, ``shard_skew``
         (max/mean live load; 1.0 = balanced), the active ``placement``
         policy, and cumulative ``rows_moved`` across shards.
+
+        ``compaction_ticks`` counts only ticks that ran work;
+        ``idle_ticks`` the no-ops.  In async mode a ``driver`` sub-dict
+        carries the ``CompactionDriver`` state (``worker_alive``,
+        ``pending_gathers``, ``staged_rows``, ``stage_calls``,
+        ``drains``/``applied``, ...).
         """
         served = max(self._queries_served, 1)
         out = {"queries": self._queries_served,
                "linear_served": self._linear_served,
                "frac_linear": self._linear_served / served,
                "compaction_ticks": self._compaction_ticks,
+               "idle_ticks": self._idle_ticks,
                "index_size": self.index.n if self.index else 0}
         if self.index is not None:
             out.update(self.index.index_stats())
+        if self.driver is not None:
+            out["driver"] = self.driver.stats()
         return out

@@ -10,8 +10,16 @@ see DESIGN.md §2).
 The scheduler is also the natural interleaving point for *off-query-
 path* index maintenance: register a ``background_tick`` (typically
 ``RetrievalService.compaction_tick``) and it runs once per formed
-batch, between query batches — budgeted LSM merge steps advance while
-no request is in flight instead of stalling one.
+batch, between query batches.  What a tick costs depends on the
+service's compaction mode (docs/compaction.md):
+
+  * budgeted — the tick runs one bounded LSM merge step (a gather of
+    ``compact_step_rows`` rows) on this thread, between batches
+    instead of inside one;
+  * async    — the gathers live on the ``CompactionDriver``'s worker
+    thread and the tick degenerates to the driver's ``drain()``: a
+    flag check, plus the atomic level swap when one is staged-ready.
+    The serving thread never pays for staging at all.
 """
 from __future__ import annotations
 
@@ -56,9 +64,10 @@ class ShapeBucketScheduler:
         Padded size is the pow2 bucket: the runner repeats the last
         payload to fill and drops the padded results.  A registered
         ``background_tick`` runs here — after the batch is formed,
-        before the runner executes it — so bounded maintenance work
-        (e.g. one LSM ``compact_step``) interleaves between query
-        batches instead of stalling one.
+        before the runner executes it — so maintenance work (a bounded
+        LSM ``compact_step``, or in async-compaction mode the driver's
+        cheap ``drain()``) interleaves between query batches instead of
+        stalling one.
         """
         take = self.queue[:self.max_batch]
         self.queue = self.queue[len(take):]

@@ -15,6 +15,9 @@ static Hybrid LSH core.
                               a padded block) and the ``SegmentStack``
                               with incremental ``compact_step`` merges
   * ``streaming.compaction``— tiered trigger policy + per-level stats
+  * ``streaming.driver``    — ``CompactionDriver``: merge staging on a
+                              background worker thread, swaps handed
+                              back to the control thread via ``drain()``
 """
 from repro.streaming.compaction import (CompactionPolicy, CompactionStats,
                                         KeepLocalPlacement,
@@ -23,6 +26,7 @@ from repro.streaming.compaction import (CompactionPolicy, CompactionStats,
                                         RoundRobinPlacement,
                                         make_placement_policy)
 from repro.streaming.delta import DeltaSegment, DeltaView, make_delta
+from repro.streaming.driver import CompactionDriver
 from repro.streaming.index import DynamicHybridIndex
 from repro.streaming.segment import (FrozenSegment, MainSegment,
                                      SegmentStack, build_main,
@@ -32,7 +36,8 @@ from repro.streaming.sharded import (ShardedDynamicHybridIndex,
 from repro.streaming.tombstones import Tombstones, make_tombstones
 
 __all__ = ["DynamicHybridIndex", "ShardedDynamicHybridIndex",
-           "ShardedQueryResult", "CompactionPolicy", "CompactionStats",
+           "ShardedQueryResult", "CompactionDriver",
+           "CompactionPolicy", "CompactionStats",
            "PlacementPolicy", "KeepLocalPlacement", "RoundRobinPlacement",
            "LoadBalancePlacement", "make_placement_policy",
            "DeltaSegment", "DeltaView", "make_delta", "MainSegment",

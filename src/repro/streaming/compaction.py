@@ -14,11 +14,21 @@ work exist, and this module decides when each runs:
               every frozen segment merges into one, dropping dead rows.
 
 Merges are *scheduled*, not run inline: the index materializes them as
-``PendingMerge`` work items whose gather+hash cost is paid in bounded
+merge-task work items whose gather cost is paid in bounded
 ``compact_step(budget_rows)`` increments off the query path.  With
 ``step_rows=None`` the index drains scheduled merges synchronously
 (the simple single-host default); the serving layer sets ``step_rows``
-and interleaves ticks between query batches.
+and either interleaves ticks between query batches or — fully async —
+hands the staging half to a ``streaming.driver.CompactionDriver``
+worker thread, keeping only the atomic swap on the control thread
+(docs/compaction.md walks the whole lifecycle).
+
+Thread-safety: ``CompactionPolicy`` is frozen/stateless — safe from
+any thread.  ``CompactionStats`` is written from the control thread
+except ``record_step``, which the driver's worker also calls per
+staging gather; it is a bare counter increment (GIL-atomic), and every
+other mutation (``record_merge``, ``record_freeze``, ``record``) stays
+control-thread-only, so ``as_dict()`` snapshots are always coherent.
 
 For the mesh-sharded index a merge is also the one moment rows can
 *move between shards* (the surviving rows sit in host-side staging
@@ -97,6 +107,12 @@ class PlacementPolicy:
     Subclass and override ``assign`` for custom placement; the sharded
     index calls it once per completed merge, at swap time, after the
     mid-merge delete re-check (so only truly-live rows are placed).
+    ``assign`` always runs on the control thread — even under the async
+    ``CompactionDriver`` the swap (and with it placement) never moves
+    off-thread, because ``base_load`` must be the live per-shard loads
+    at the moment of the swap.  Policies may therefore keep state
+    without locking, but must not block: a slow ``assign`` stalls the
+    serving thread's drain.
     """
 
     name = "custom"
@@ -254,6 +270,18 @@ class CompactionPolicy:
 
 @dataclasses.dataclass
 class CompactionStats:
+    """Cumulative maintenance counters, shared by both streaming
+    indexes and surfaced through ``index_stats()``.
+
+    ``steps`` counts budgeted advances — serving-thread ticks *and*
+    driver-worker staging gathers (``record_step`` is the one method a
+    worker thread may call; everything else is control-thread-only).
+    ``record_merge``'s ``seconds`` is accumulated *work* time wherever
+    it ran — under the async driver that is mostly worker time, so it
+    no longer approximates serving-thread stall; the ``BENCH_async``
+    bench measures that directly instead.
+    """
+
     compactions: int = 0        # completed merges + full compactions
     freezes: int = 0            # delta -> level-0 seals
     last_reason: Optional[str] = None

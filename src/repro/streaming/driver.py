@@ -1,0 +1,250 @@
+"""CompactionDriver — merge staging on a background worker thread.
+
+PR 3/4 moved merge work off the *query path*: merges advance in bounded
+``compact_step(budget_rows)`` increments that the serving layer ticks
+between batches.  The tick itself, though, still runs on the serving
+thread — every gather of ``budget_rows`` rows is serving-thread time a
+query batch could have had.  This module removes even that: a
+``CompactionDriver`` owns a daemon worker thread that runs the staging
+gathers (``stage_step``) continuously, while the parts that mutate
+served state stay on the control thread behind a tiny handoff:
+
+  worker thread                      control (serving) thread
+  ─────────────                      ────────────────────────
+  stage_step(budget) → "staging"     insert / delete / query
+  stage_step(budget) → "staging"     drain()  → nothing ready, ~free
+  stage_step(budget) → "ready"       insert / delete / query
+  prepare_staged()  (pre-build) ──►  drain()  → apply_staged():
+  (waits for the swap)                 mid-merge delete re-check,
+                                       atomic level swap,
+                                       PlacementPolicy + _loc rewrites,
+                                       cascade scheduling
+  stage_step(...)  (next merge)      drain()  → nothing ready, ~free
+
+On the single-host index the worker also *pre-builds* the merged
+segment from its immutable staging buffers (``prepare_staged``), so
+the control-thread swap runs no fused build at all — rows deleted
+after staging are carried as tombstones in the new segment (the same
+mask a normal delete leaves) instead of forcing a rebuild.  The
+sharded index cannot pre-build (its ``PlacementPolicy`` partitions
+rows against swap-time live loads), so its drain pays the build; the
+staging gathers — the churn-proportional half — are off-thread either
+way.
+
+The swap MUST stay on the control thread: it re-checks staged rows
+against tombstones that the control thread owns, rewrites the host-side
+``_loc`` map that inserts/deletes read, and (sharded) runs the
+``PlacementPolicy`` against live per-shard loads — none of which can
+race a mutation.  Staging, by contrast, only *reads* immutable frozen
+rows into the task's private host buffers (on the worker's own stream,
+where the platform has one), so it can overlap serving freely; churn
+that lands mid-stage is caught by the swap-time re-check.
+
+Thread-safety contract (who may call what):
+
+  * worker thread (internal): ``index.stage_step`` under the driver
+    lock.
+  * control thread: ``drain`` (between batches — the scheduler's
+    ``background_tick``), ``flush`` (checkpoint barrier), ``start`` /
+    ``stop`` / ``notify`` / ``stats``.
+  * anything that resets index state wholesale (``compact()``,
+    ``build()``, ``load_state_dict()``) must not run while the worker
+    is live: ``stop()`` or ``flush()`` first.  ``RetrievalService``
+    does this around checkpoints and restores.
+
+The driver works with both streaming indexes — ``DynamicHybridIndex``
+and ``ShardedDynamicHybridIndex`` expose the same
+``stage_step`` / ``apply_staged`` / ``has_compaction_work`` surface.
+For the sharded index one worker stages all shards' chunks of the
+active merge: a sharded level swap is a single cross-shard atomic
+operation, so per-shard swap serialization on the control thread falls
+out of the same ``drain()``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+__all__ = ["CompactionDriver"]
+
+
+class CompactionDriver:
+    """Background staging worker + control-thread swap handoff.
+
+    Args:
+      index: a streaming index (``DynamicHybridIndex`` or
+        ``ShardedDynamicHybridIndex``).  The driver never outlives the
+        index's state: stop/flush it before ``build``/``compact``/
+        ``load_state_dict``.
+      budget_rows: rows per worker staging gather (None: the index
+        policy's ``step_rows``, else its delta capacity) — bounds the
+        lock hold time per gather, which is the longest a control-thread
+        ``drain`` can be made to wait.
+      poll_s: worker sleep between idle polls; mutations can cut the
+        latency with ``notify()``.
+
+    Lifecycle: ``start()`` → serve (… ``drain()`` between batches …) →
+    ``flush()`` at checkpoints → ``stop(flush=True)`` at shutdown.
+    """
+
+    def __init__(self, index, *, budget_rows: Optional[int] = None,
+                 poll_s: float = 0.02, name: str = "compaction-driver"):
+        self.index = index
+        self.budget_rows = budget_rows
+        self.poll_s = float(poll_s)
+        self.name = name
+        # one lock excludes worker staging from control-thread swaps;
+        # staging never blocks serving for longer than one budgeted
+        # gather because the worker re-acquires per stage_step call
+        self._mu = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._stage_calls = 0       # worker gathers that ran
+        self._prepares = 0          # worker speculative segment builds
+        self._drains = 0            # control-thread drain() calls
+        self._applied = 0           # merges swapped in via drain/flush
+        self._flushes = 0
+        self._errors: List[str] = []
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def running(self) -> bool:
+        """True while the worker thread is alive."""
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "CompactionDriver":
+        """Start (or restart) the daemon worker; returns self."""
+        if self.running:
+            return self
+        self._stop.clear()
+        self._wake.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=self.name)
+        self._thread.start()
+        return self
+
+    def stop(self, flush: bool = False) -> None:
+        """CONTROL-THREAD ONLY: join the worker; optionally finish all
+        pending merge work inline afterwards (``flush=True``) so no
+        staging is left orphaned.  Idempotent; ``start()`` restarts."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=60.0)
+            if self._thread.is_alive():       # pragma: no cover
+                self._errors.append("stop: worker join timed out")
+            self._thread = None
+        if flush:
+            self.flush()
+
+    def notify(self) -> None:
+        """Hint the worker that new merge work may exist (cheap; any
+        thread).  Without it the worker still finds work within
+        ``poll_s``."""
+        self._wake.set()
+
+    # ------------------------------------------------- control-thread ops
+    def drain(self) -> int:
+        """CONTROL-THREAD ONLY: apply any fully-staged merge swaps.
+
+        The serving loop's between-batches hook (replaces the budgeted
+        ``compact_step`` tick): when nothing is staged-ready this is one
+        flag check under the lock — the gathers themselves live on the
+        worker.  Applies cascaded-ready heads in a loop and returns the
+        number of merges swapped in.
+        """
+        self._drains += 1
+        applied = 0
+        with self._mu:
+            while self.index.apply_staged():
+                applied += 1
+        if applied:
+            self._applied += applied
+            self._wake.set()          # the worker can stage the next merge
+        return applied
+
+    def flush(self) -> int:
+        """CONTROL-THREAD ONLY: run every pending merge to completion
+        inline (stage remainder + swap), returning merges applied.
+
+        The checkpoint barrier: after a flush there is no staged or
+        queued merge, so a snapshot can never capture a half-staged
+        state and restores re-derive a clean schedule.  The worker (if
+        running) is simply excluded by the lock for the duration.
+        """
+        self._flushes += 1
+        applied = 0
+        with self._mu:
+            while self.index.has_compaction_work:
+                if self.index.apply_staged():
+                    applied += 1
+                else:
+                    self.index.stage_step(1 << 30)   # stage the remainder
+        if applied:
+            self._applied += applied
+        return applied
+
+    # ------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            did_work = False
+            try:
+                with self._mu:
+                    if self.index.staged_ready:
+                        # pre-build the merged segment so the control
+                        # thread's swap is re-check + rewire only.
+                        # did_work keeps the loop hot, so this runs on
+                        # the iteration right after the final gather —
+                        # no poll wait in which a drain could beat it
+                        # to an inline build.  Once prepared (or on the
+                        # sharded index, which never pre-builds), the
+                        # head just waits on a drain — re-polling would
+                        # spin on the lock.
+                        if self.index.prepare_staged():
+                            self._prepares += 1
+                            did_work = True
+                    else:
+                        status = self.index.stage_step(self.budget_rows)
+                        if status != "idle":
+                            self._stage_calls += 1
+                            did_work = True
+            except Exception as e:    # control reset state mid-stage
+                # (compact()/restore without stop(): defensive — abandon
+                # the gather, the re-derived schedule restages)
+                if len(self._errors) < 64:      # bounded: a wedged
+                    self._errors.append(repr(e))  # worker must not grow
+                did_work = False
+            if did_work:
+                continue              # more to do right away
+            self._wake.wait(self.poll_s)
+            self._wake.clear()
+
+    # ------------------------------------------------------ observability
+    def stats(self) -> Dict[str, object]:
+        """Driver-state snapshot (host ints/bools; any thread).
+
+        ``pending_gathers`` queued merge tasks, ``staged_rows`` rows in
+        staging buffers, ``staged_ready`` head-awaiting-swap,
+        ``worker_alive``, plus cumulative ``stage_calls`` / ``prepares``
+        (worker gathers and pre-builds), ``drains`` / ``applied`` /
+        ``flushes`` (control-thread side), and ``worker_errors``.
+        """
+        return {
+            "worker_alive": self.running,
+            "pending_gathers": int(self.index.pending_merges),
+            "staged_rows": int(self.index.staged_rows),
+            "staged_ready": bool(self.index.staged_ready),
+            "budget_rows": self.budget_rows,
+            "stage_calls": self._stage_calls,
+            "prepares": self._prepares,
+            "drains": self._drains,
+            "applied": self._applied,
+            "flushes": self._flushes,
+            "worker_errors": len(self._errors),
+        }
+
+    def __repr__(self) -> str:
+        return (f"CompactionDriver({self.name!r}, "
+                f"alive={self.running}, "
+                f"pending={self.index.pending_merges})")

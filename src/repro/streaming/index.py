@@ -52,7 +52,8 @@ from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
 from repro.streaming.segment import (FrozenSegment, MainSegment,
-                                     SegmentStack, freeze_segment)
+                                     SegmentStack, freeze_segment,
+                                     mark_rows_dead)
 
 __all__ = ["DynamicHybridIndex"]
 
@@ -255,19 +256,8 @@ class DynamicHybridIndex:
                 by_uid.setdefault(loc[1], []).append(loc[2])
         removed = 0
         for uid, rows in by_uid.items():
-            f = self.stack.by_uid(uid)
-            k = len(rows)
-            pk = _pad_pow2(k)
-            rows_p = np.zeros(pk, np.int32)
-            rows_p[:k] = rows
-            valid = np.zeros(pk, bool)
-            valid[:k] = True
-            # padded lanes point at row 0's buckets but add 0 there
-            row_buckets = f.seg.bucket_ids[jnp.asarray(rows_p)]
-            f.tomb = tomb_lib.mark_dead(f.tomb, jnp.asarray(rows_p),
-                                        row_buckets, jnp.asarray(valid))
-            f.n_live -= k
-            removed += k
+            mark_rows_dead(self.stack.by_uid(uid), rows)
+            removed += len(rows)
         if delta_slots:
             k = len(delta_slots)
             pk = _pad_pow2(k)
@@ -344,14 +334,94 @@ class DynamicHybridIndex:
                                       self.num_buckets, self.m)
         self.stats.record_step()
         if res is not None:
-            if res.new is not None:
-                for e, i in res.moved:
-                    self._loc[e] = ("m", res.new.uid, i)
-            self.stats.record_merge(res.target_level, len(res.moved),
-                                    res.steps, res.seconds, res.dropped,
-                                    reason=res.reason)
-            self._schedule_merges()          # cascade up the levels
+            self._absorb_merge(res)
         return self.stack.has_work
+
+    def _absorb_merge(self, res) -> None:
+        """Fold a completed ``MergeResult`` into index state (the one
+        post-swap block, shared by the tick and driver paths): ``_loc``
+        rewrites for every surviving row, merge stats, and the cascade
+        re-schedule.  Control-thread-only."""
+        if res.new is not None:
+            for e, i in res.moved:
+                self._loc[e] = ("m", res.new.uid, i)
+        self.stats.record_merge(res.target_level, len(res.moved),
+                                res.steps, res.seconds, res.dropped,
+                                reason=res.reason)
+        self._schedule_merges()          # cascade up the levels
+
+    # ---------------------------------------------- driver (async) surface
+    @property
+    def has_compaction_work(self) -> bool:
+        """True while any merge is queued (parity with the sharded index
+        — the one predicate drivers and serving ticks poll)."""
+        return self.stack.has_work
+
+    @property
+    def staged_ready(self) -> bool:
+        """A fully-staged merge awaits a control-thread ``apply_staged``."""
+        return self.stack.staged_ready
+
+    @property
+    def staged_rows(self) -> int:
+        """Rows currently gathered into merge staging buffers."""
+        return self.stack.staged_rows
+
+    @property
+    def pending_merges(self) -> int:
+        """Queued merge tasks (head may be partially staged)."""
+        return len(self.stack.tasks)
+
+    def stage_step(self, budget_rows: Optional[int] = None) -> str:
+        """Advance ONLY the staging half of the active merge.
+
+        The worker-thread half of the ``CompactionDriver`` split: gathers
+        at most ``budget_rows`` live rows into the task's private host
+        buffers without touching the served level list, so it is safe to
+        run concurrently with inserts/deletes/queries on the control
+        thread.  Returns ``"idle"`` | ``"staging"`` | ``"ready"``; once
+        ``"ready"``, only a control-thread ``apply_staged`` makes
+        further progress.
+        """
+        if not self.stack.has_work:
+            return "idle"
+        if self.stack.staged_ready:
+            return "ready"
+        budget = int(budget_rows or self.policy.step_rows
+                     or max(self.delta_capacity, 1))
+        st = self.stack.stage_step(budget)
+        self.stats.record_step()
+        return st
+
+    def prepare_staged(self) -> bool:
+        """Speculatively build the staged merge's output off-thread.
+
+        Worker-thread-safe (the staging buffers are immutable once
+        ``stage_step`` reports ``"ready"``): runs the fused build so
+        the control thread's ``apply_staged`` shrinks to the delete
+        re-check + uid + list swap + ``_loc`` rewrites.  Returns True
+        when a build ran.
+        """
+        return self.stack.prepare_staged(self._bucket_fn, self.params,
+                                         self.num_buckets, self.m)
+
+    def apply_staged(self) -> bool:
+        """CONTROL-THREAD ONLY: swap a fully-staged merge in.
+
+        Runs the mid-merge delete re-check, the atomic level swap, the
+        ``_loc`` rewrites for every surviving row, and schedules
+        cascaded merges — plus the fused build when no worker
+        ``prepare_staged`` pre-built it.  Returns True when a merge was
+        applied (False: nothing fully staged — staging stays with the
+        worker's ``stage_step``).
+        """
+        res = self.stack.apply_staged(self._bucket_fn, self.params,
+                                      self.num_buckets, self.m)
+        if res is None:
+            return False
+        self.stats.record_step()
+        self._absorb_merge(res)
+        return True
 
     def _drain(self) -> None:
         while self.stack.has_work:

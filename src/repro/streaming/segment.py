@@ -41,7 +41,7 @@ from repro.core.lsh.tables import LSHTables, build_tables
 from repro.streaming import tombstones as tomb_lib
 
 __all__ = ["MainSegment", "build_main", "FrozenSegment", "freeze_segment",
-           "MergeTask", "MergeResult", "SegmentStack"]
+           "mark_rows_dead", "MergeTask", "MergeResult", "SegmentStack"]
 
 
 @dataclasses.dataclass
@@ -141,6 +141,29 @@ def freeze_segment(x: np.ndarray, ext_ids: np.ndarray, bucket_fn, params,
                          n_rows=k, n_live=k)
 
 
+def mark_rows_dead(f: FrozenSegment, rows: Sequence[int]) -> None:
+    """Tombstone ``rows`` of a frozen segment in place.
+
+    The one home of the padded mark-dead idiom: the row batch pads to a
+    power of two (bounded jit shapes) with pad lanes pointing at row 0's
+    buckets but adding 0 to the dead counts.  Updates the live bitmap,
+    the per-bucket dead counts, and ``n_live``.  Control-thread-only
+    (rebinds ``f.tomb``, which queries and merge re-checks read).
+    """
+    k = len(rows)
+    if k == 0:
+        return
+    pk = _pad_size(k)
+    rows_p = np.zeros(pk, np.int32)
+    rows_p[:k] = rows
+    valid = np.zeros(pk, bool)
+    valid[:k] = True
+    row_buckets = f.seg.bucket_ids[jnp.asarray(rows_p)]
+    f.tomb = tomb_lib.mark_dead(f.tomb, jnp.asarray(rows_p), row_buckets,
+                                jnp.asarray(valid))
+    f.n_live -= k
+
+
 # ---------------------------------------------------------------------------
 # Budgeted merges
 # ---------------------------------------------------------------------------
@@ -161,15 +184,33 @@ class MergeTask:
     row_off: int = 0        # cursor: next row within it
     steps: int = 0
     work_seconds: float = 0.0   # sum of this task's compact_step durations
+    # worker-side speculative build of the merged segment (uid unset,
+    # -1): populated by prepare_staged() once staging completes; the
+    # control-thread swap then only re-checks tombstones + rewires
+    prepared: Optional["FrozenSegment"] = None
 
     @property
     def staged_done(self) -> bool:
         return self.input_idx >= len(self.uids)
 
+    @property
+    def staged_rows(self) -> int:
+        """Live rows gathered into this task's staging buffers so far."""
+        return sum(len(r) for r in self.rows)
+
 
 @dataclasses.dataclass
 class MergeResult:
-    """Outcome of a completed (swapped-in) merge."""
+    """Outcome of a completed (swapped-in) merge.
+
+    ``dropped`` counts dead rows reclaimed (not carried into the new
+    segment).  On the classic inline path that includes rows deleted
+    mid-merge; on the prepared path (worker pre-built the segment) such
+    rows ride along *tombstoned* in the new segment instead — masked
+    from every query exactly like a normal delete, reclaimed at the
+    next merge — so ``dropped`` there counts only rows already dead
+    when staged.  ``moved`` lists live rows only.
+    """
 
     new: Optional[FrozenSegment]          # None when every row was dead
     removed_uids: List[int]
@@ -188,6 +229,18 @@ class SegmentStack:
     level, and what merge work is pending.  The index above it owns the
     delta, the tombstone writes, the external-id location map, and the
     decision of *when* to schedule (``CompactionPolicy``).
+
+    Thread-safety contract (the ``CompactionDriver`` split): merge work
+    divides into a *staging* half (``stage_step`` — pure reads of
+    immutable segment rows into the task's private host buffers) and an
+    *apply* half (``apply_staged`` — mutates the level list and swaps
+    the merged segment in).  Staging may run on a background worker
+    thread concurrently with inserts (delta-only), deletes (tombstone
+    rebinds; the swap re-checks them), freezes (list appends), and
+    queries.  ``apply_staged``, ``compact_step``, and anything that
+    resets the stack (``build``/``compact``/``load_state_dict`` on the
+    index above) are control-thread-only and must be mutually excluded
+    from staging — the driver's lock does exactly that.
     """
 
     def __init__(self) -> None:
@@ -246,6 +299,16 @@ class SegmentStack:
         """True while any merge is queued (``compact_step`` will act)."""
         return bool(self.tasks)
 
+    @property
+    def staged_ready(self) -> bool:
+        """The head merge is fully staged and waits on ``apply_staged``."""
+        return bool(self.tasks) and self.tasks[0].staged_done
+
+    @property
+    def staged_rows(self) -> int:
+        """Rows currently held in staging buffers across queued merges."""
+        return sum(t.staged_rows for t in self.tasks)
+
     # --------------------------------------------------------- scheduling
     def schedule(self, uids: Sequence[int], target_level: int,
                  reason: str) -> bool:
@@ -285,6 +348,74 @@ class SegmentStack:
             res.seconds = task.work_seconds
         return res
 
+    def stage_step(self, budget_rows: int) -> str:
+        """Advance ONLY the staging half of the head merge (no swap).
+
+        Safe to call from a background worker thread: it reads immutable
+        segment rows into the task's private host buffers and never
+        touches the level list.  Returns ``"idle"`` (nothing queued),
+        ``"staging"`` (more gathers remain), or ``"ready"`` (staging is
+        complete; a control-thread ``apply_staged`` must swap it in).
+        """
+        if not self.tasks:
+            return "idle"
+        task = self.tasks[0]
+        if task.staged_done:
+            return "ready"
+        task.steps += 1
+        t0 = time.perf_counter()
+        self._stage(task, max(int(budget_rows), 1))
+        task.work_seconds += time.perf_counter() - t0
+        return "ready" if task.staged_done else "staging"
+
+    def prepare_staged(self, bucket_fn, params, num_buckets: int,
+                       m: int) -> bool:
+        """Speculatively build the head merge's output segment.
+
+        Worker-thread-safe: once staging is complete the task's buffers
+        are immutable, so the fused ``build_tables`` over them can run
+        off-thread (the expensive half of a swap).  The control-thread
+        ``apply_staged`` then only re-checks tombstones — rows deleted
+        since staging are *marked dead in the prepared segment* rather
+        than rebuilt away — assigns the uid, and swaps lists.  Returns
+        True when a build ran (False: nothing staged-ready, already
+        prepared, or zero staged rows — the classic path handles those).
+        """
+        if not self.tasks:
+            return False
+        task = self.tasks[0]
+        if not task.staged_done or task.prepared is not None \
+                or not task.rows:
+            return False
+        t0 = time.perf_counter()
+        x = np.concatenate(task.rows, axis=0)
+        ids = np.concatenate(task.ids, axis=0)
+        bids = np.concatenate(task.bids, axis=0)
+        task.prepared = freeze_segment(
+            x, ids, bucket_fn, params, num_buckets, m,
+            uid=-1, level=task.target_level, bucket_rows=bids)
+        task.work_seconds += time.perf_counter() - t0
+        return True
+
+    def apply_staged(self, bucket_fn, params, num_buckets: int,
+                     m: int) -> Optional[MergeResult]:
+        """CONTROL-THREAD ONLY: swap a fully-staged head merge in.
+
+        Runs the mid-merge delete re-check, the fused build over the
+        surviving staged rows, and the atomic level-list swap.  Returns
+        the ``MergeResult``, or None when no head merge is fully staged
+        (nothing happens — staging stays with ``stage_step``).
+        """
+        if not self.tasks or not self.tasks[0].staged_done:
+            return None
+        task = self.tasks[0]
+        task.steps += 1
+        t0 = time.perf_counter()
+        res = self._finalize(task, num_buckets, m, bucket_fn, params)
+        task.work_seconds += time.perf_counter() - t0
+        res.seconds = task.work_seconds
+        return res
+
     def _stage(self, task: MergeTask, budget: int) -> None:
         left = budget
         while left > 0 and not task.staged_done:
@@ -314,6 +445,8 @@ class SegmentStack:
 
     def _finalize(self, task: MergeTask, num_buckets: int, m: int,
                   bucket_fn, params) -> MergeResult:
+        if task.prepared is not None:
+            return self._swap_prepared(task)
         # Re-check staged rows against the *current* tombstones: deletes
         # that landed mid-merge must not resurrect at swap time.
         keep_x, keep_ids, keep_bids = [], [], []
@@ -346,5 +479,35 @@ class SegmentStack:
         moved = [(int(e), i) for i, e in enumerate(ids.tolist())]
         return MergeResult(new=new, removed_uids=removed, moved=moved,
                            dropped=total_in - len(ids), steps=task.steps,
+                           reason=task.reason, seconds=task.work_seconds,
+                           target_level=task.target_level)
+
+    def _swap_prepared(self, task: MergeTask) -> MergeResult:
+        """Swap in a worker-prepared segment: the control thread's share
+        is the mid-merge delete re-check (deaths since staging become
+        tombstones in the new segment — same mask a normal delete
+        leaves, reclaimed at the next merge), the uid assignment, and
+        the list swap.  No build runs here."""
+        new = task.prepared
+        dead_pos: List[int] = []      # new-segment rows deleted mid-merge
+        moved: List[Tuple[int, int]] = []
+        off = 0
+        for (uid, idx), ids in zip(task.src, task.ids):
+            live_now = np.asarray(self.by_uid(uid).tomb.live)[idx]
+            pos = off + np.arange(len(idx))
+            dead_pos.extend(pos[~live_now].tolist())
+            moved.extend(zip(ids[live_now].tolist(),
+                             pos[live_now].tolist()))
+            off += len(idx)
+        total_in = sum(s.n_rows for s in self.segments
+                       if s.uid in task.uids)
+        self.tasks.pop(0)
+        removed = [u for u in task.uids]
+        self.segments = [s for s in self.segments if s.uid not in removed]
+        new.uid = self.next_uid()
+        mark_rows_dead(new, dead_pos)
+        self.add(new)
+        return MergeResult(new=new, removed_uids=removed, moved=moved,
+                           dropped=total_in - off, steps=task.steps,
                            reason=task.reason, seconds=task.work_seconds,
                            target_level=task.target_level)

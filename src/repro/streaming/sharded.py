@@ -689,6 +689,83 @@ class ShardedDynamicHybridIndex:
     def has_compaction_work(self) -> bool:
         return bool(self._tasks)
 
+    @property
+    def staged_ready(self) -> bool:
+        """A fully-staged merge awaits a control-thread ``apply_staged``."""
+        return bool(self._tasks) and self._tasks[0].staged_done
+
+    @property
+    def staged_rows(self) -> int:
+        """Rows currently gathered into merge staging buffers."""
+        return sum(sum(len(r) for r in t.rows) for t in self._tasks)
+
+    @property
+    def pending_merges(self) -> int:
+        """Queued merge tasks (head may be partially staged)."""
+        return len(self._tasks)
+
+    def stage_step(self, budget_rows: Optional[int] = None) -> str:
+        """Advance ONLY the staging half of the active merge.
+
+        The worker-thread half of the ``CompactionDriver`` split: walks
+        the head task's per-(segment, shard) staging cursors, gathering
+        at most ``budget_rows`` live rows across shards into private
+        host buffers.  The served level list is untouched, so this is
+        safe concurrently with control-thread inserts/deletes/queries.
+        Returns ``"idle"`` | ``"staging"`` | ``"ready"``; once
+        ``"ready"``, only a control-thread ``apply_staged`` (the swap +
+        placement + ``_loc`` rewrites) makes further progress.
+        """
+        if not self._tasks:
+            return "idle"
+        task = self._tasks[0]
+        if task.staged_done:
+            return "ready"
+        budget = int(budget_rows or self.policy.step_rows
+                     or max(self.delta_capacity, 1))
+        task.steps += 1
+        self.stats.record_step()
+        t0 = time.perf_counter()
+        self._stage(task, budget)
+        task.work_seconds += time.perf_counter() - t0
+        return "ready" if task.staged_done else "staging"
+
+    def prepare_staged(self) -> bool:
+        """No-op on the sharded index (returns False).
+
+        The single-host stack pre-builds a staged merge's output on the
+        driver's worker (``DynamicHybridIndex.prepare_staged``); here
+        the build cannot run early because the ``PlacementPolicy``
+        partitions the staged rows using per-shard live loads *at swap
+        time* — pre-building would bake in stale placement.  The swap
+        (build included) therefore stays in ``apply_staged`` on the
+        control thread; the staging gathers — the O(rows) churn-scaling
+        half — still run on the worker.
+        """
+        return False
+
+    def apply_staged(self) -> bool:
+        """CONTROL-THREAD ONLY: swap a fully-staged merge in.
+
+        Runs the mid-merge delete re-check, the ``PlacementPolicy``
+        target assignment, the fused build of the new level, the atomic
+        level-list swap with its ``_loc`` rewrites, and schedules
+        cascaded merges.  Returns True when a merge was applied.
+        """
+        if not self._tasks or not self._tasks[0].staged_done:
+            return False
+        task = self._tasks[0]
+        task.steps += 1
+        self.stats.record_step()
+        t0 = time.perf_counter()
+        total, dropped, moved = self._finalize_merge(task)
+        task.work_seconds += time.perf_counter() - t0
+        self.stats.record_merge(task.target_level, total, task.steps,
+                                task.work_seconds, dropped,
+                                reason=task.reason, moved=moved)
+        self._schedule_merges()       # cascade up the levels
+        return True
+
     def compact_step(self, budget_rows: Optional[int] = None) -> bool:
         """Advance the active merge by one bounded step (gather + hash of
         at most ``budget_rows`` rows across shards, or — once staging is

@@ -1,0 +1,326 @@
+"""Async compaction driver: merge staging on a worker thread, swaps on
+the control thread.
+
+The load-bearing contracts:
+
+  * equivalence under concurrency — queries issued while the driver's
+    worker stages a merge (and at every drained state after a swap)
+    report exactly what a fresh build on the surviving corpus reports;
+  * no orphans — ``stop``/``flush`` leave no queued merge, no staged
+    rows, and a consistent ``_loc`` map;
+  * checkpoints — a snapshot taken mid-merge with the worker live
+    round-trips (staged progress is volatile by contract), and the
+    service-level ``checkpoint`` flushes first so the saved structure
+    is merge-free.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import HybridLSHIndex
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import (CompactionDriver, CompactionPolicy,
+                             DynamicHybridIndex,
+                             ShardedDynamicHybridIndex)
+
+D, L, B, M, CAP, R = 8, 4, 256, 32, 2048, 1.2
+
+
+def _data(n=900, seed=0):
+    x = np.asarray(clustered_dataset(n, D, n_clusters=12,
+                                     dense_core_frac=0.2, core_scale=0.05,
+                                     seed=seed, metric="l2"))
+    return x.astype(np.float32)
+
+
+def _fam():
+    return make_family("l2", d=D, L=L, r=1.0)
+
+
+def _dyn(**kw):
+    kw.setdefault("delta_capacity", 128)
+    kw.setdefault("policy", CompactionPolicy(delta_fill=1.0,
+                                             tombstone_ratio=2.0,
+                                             fanout=2, step_rows=48))
+    return DynamicHybridIndex(_fam(), num_buckets=B, m=M, cap=CAP, key=0,
+                              **kw)
+
+
+def _fresh_sets(x, q, force, ext_ids=None):
+    idx = HybridLSHIndex(_fam(), num_buckets=B, m=M, cap=CAP, key=0).build(x)
+    sets = idx.query(jnp.asarray(q), R, force=force).neighbor_sets()
+    if ext_ids is None:
+        return sets
+    return {k: {int(ext_ids[i]) for i in v} for k, v in sets.items()}
+
+
+def _settle(dyn, drv, deadline_s=60.0):
+    """Drain until the worker has staged everything and every swap has
+    been applied (the steady state a serving loop reaches)."""
+    t_end = time.time() + deadline_s
+    while dyn.has_compaction_work and time.time() < t_end:
+        drv.drain()
+        time.sleep(0.002)
+    assert not dyn.has_compaction_work, (dyn.index_stats(), drv.stats())
+
+
+def test_driver_concurrent_churn_equivalence():
+    """Queries at every drained state — merges staged by the worker
+    while inserts/deletes land — match a fresh single-host build."""
+    x = _data()
+    q = x[::47][:10]
+    dyn = _dyn().build(x[:256])
+    drv = CompactionDriver(dyn, budget_rows=48, poll_s=0.001).start()
+    try:
+        live = np.ones(900, bool)
+        checked = 0
+        for lo in range(256, 900, 100):
+            dyn.insert(x[lo:lo + 100])
+            drv.notify()
+            if lo == 456:
+                dyn.delete(range(100, 200, 2))
+                live[100:200:2] = False
+            drv.drain()
+            if lo in (456, 656):        # drained states mid-stream
+                ids = np.nonzero(live)[0]
+                got = dyn.query(q, R, force="linear").neighbor_sets()
+                assert got == _fresh_sets(x[:lo + 100][live[:lo + 100]], q,
+                                          "linear",
+                                          ext_ids=ids[ids < lo + 100]), lo
+                checked += 1
+        assert checked == 2
+        _settle(dyn, drv)
+        st = drv.stats()
+        assert st["stage_calls"] > 0        # the worker really staged
+        assert st["applied"] > 0            # drains really swapped
+        assert st["worker_errors"] == 0
+        assert st["staged_rows"] == 0 and st["pending_gathers"] == 0
+        ids = np.nonzero(live)[0]
+        for force in ("lsh", "linear"):
+            got = dyn.query(q, R, force=force).neighbor_sets()
+            assert got == _fresh_sets(x[live], q, force, ext_ids=ids), force
+    finally:
+        drv.stop()
+
+
+def test_driver_stop_flush_leaves_no_orphans():
+    """stop(flush=True) with merges mid-stage completes them inline:
+    nothing queued, nothing staged, _loc consistent (deletes work)."""
+    x = _data(n=640)
+    dyn = _dyn().build(x[:256])
+    drv = CompactionDriver(dyn, budget_rows=32, poll_s=0.001).start()
+    dyn.insert(x[256:640])                  # several freezes -> merges
+    drv.notify()
+    drv.stop(flush=True)
+    st = drv.stats()
+    assert st["worker_alive"] is False
+    assert st["pending_gathers"] == 0 and st["staged_rows"] == 0
+    assert not dyn.has_compaction_work
+    # _loc survived every swap: rows merged under the driver delete fine
+    assert dyn.delete(range(0, 640, 7)) == len(range(0, 640, 7))
+    live = np.ones(640, bool)
+    live[::7] = False
+    ids = np.nonzero(live)[0]
+    got = dyn.query(x[::80][:6], R, force="linear").neighbor_sets()
+    assert got == _fresh_sets(x[live], x[::80][:6], "linear", ext_ids=ids)
+    # a stopped driver restarts cleanly on the same index
+    drv.start()
+    assert drv.running
+    dyn.insert(_data(n=700, seed=3)[640:700], ids=range(1000, 1060))
+    drv.notify()
+    _settle(dyn, drv)
+    drv.stop(flush=True)
+    assert not dyn.has_compaction_work
+
+
+def test_delete_after_prepare_carried_as_tombstones():
+    """Rows deleted after the worker pre-built the merged segment are
+    masked (tombstoned in the new segment), never resurrected, and the
+    dropped/dead accounting stays consistent."""
+    x = _data(n=512)
+    q = x[::40][:8]
+    dyn = _dyn().build(x[:256])
+    dyn.insert(x[256:512])               # two level-0 freezes -> merge
+    assert dyn.has_compaction_work
+    drv = CompactionDriver(dyn, budget_rows=64, poll_s=0.001).start()
+    try:
+        t_end = time.time() + 30
+        while not (dyn.staged_ready
+                   and dyn.stack.tasks[0].prepared is not None) \
+                and time.time() < t_end:
+            time.sleep(0.001)
+        assert dyn.stack.tasks[0].prepared is not None
+        dead = list(range(0, 500, 3))    # staged + prepared + delta rows
+        assert dyn.delete(dead) == len(dead)
+        assert drv.drain() >= 1          # swap applied on control thread
+        # mid-merge deletes ride along tombstoned in the swapped-in
+        # segment (max uid = the merged one) until the next merge
+        merged = max(dyn.stack.segments, key=lambda s: s.uid)
+        assert merged.n_dead > 0
+        _settle(dyn, drv)                # cascades reclaim them
+        assert drv.stats()["prepares"] >= 1
+    finally:
+        drv.stop(flush=True)
+    live = np.ones(512, bool)
+    live[dead] = False
+    ids = np.nonzero(live)[0]
+    for force in ("lsh", "linear"):
+        got = dyn.query(q, R, force=force).neighbor_sets()
+        assert got == _fresh_sets(x[live], q, force, ext_ids=ids), force
+        flat = set().union(*got.values()) if got else set()
+        assert flat.isdisjoint(dead)
+    # _loc stayed consistent through the prepared swap
+    assert dyn.delete(ids[:10].tolist()) == 10
+    assert dyn.n == int(live.sum()) - 10
+
+
+def test_driver_checkpoint_roundtrip_mid_merge(tmp_path):
+    """A snapshot taken while the worker is mid-stage (no flush, no
+    drain) round-trips: staged progress is volatile, the restored index
+    re-derives its schedule and converges to the same answers."""
+    x = _data()
+    q = x[::70][:8]
+    dyn = _dyn().build(x[:256])
+    dyn.insert(x[256:600])
+    assert dyn.has_compaction_work
+    drv = CompactionDriver(dyn, budget_rows=16, poll_s=0.001).start()
+    try:
+        t_end = time.time() + 30
+        while dyn.staged_rows == 0 and time.time() < t_end:
+            time.sleep(0.001)
+        assert dyn.staged_rows > 0          # worker is mid-stage
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save_index(3, dyn)              # no flush: truly mid-merge
+    finally:
+        drv.stop(flush=True)
+    restored = _dyn()
+    assert mgr.restore_index(restored) == 3
+    drv2 = CompactionDriver(restored, budget_rows=64, poll_s=0.001).start()
+    try:
+        restored.insert(x[600:700])
+        drv2.notify()
+        _settle(restored, drv2)
+    finally:
+        drv2.stop(flush=True)
+    dyn.insert(x[600:700])
+    while dyn.compact_step(512):
+        pass
+    for f in ("lsh", "linear"):
+        assert (restored.query(q, R, force=f).neighbor_sets()
+                == dyn.query(q, R, force=f).neighbor_sets()), f
+
+
+def test_driver_sharded_equivalence_and_locations():
+    """The driver over the mesh-sharded index (1-device mesh, same code
+    path): worker-staged merges + control-thread swaps with placement
+    keep neighbor sets and the _loc invariant intact."""
+    mesh = jax.make_mesh((1,), ("data",))
+    x = _data()
+    q = x[::60][:10]
+    sh = ShardedDynamicHybridIndex(
+        _fam(), num_buckets=B, mesh=mesh, m=M, cap=CAP, key=0,
+        delta_capacity=128, max_out=900, placement="load_balance",
+        policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                fanout=2, step_rows=48))
+    sh.build(x[:256])
+    drv = CompactionDriver(sh, budget_rows=48, poll_s=0.001).start()
+    try:
+        live = np.ones(900, bool)
+        for lo in range(256, 900, 100):
+            sh.insert(x[lo:lo + 100])
+            drv.notify()
+            if lo == 556:
+                sh.delete(range(300, 400, 2))
+                live[300:400:2] = False
+            drv.drain()
+        _settle(sh, drv)
+        assert drv.stats()["worker_errors"] == 0
+        sh.validate_locations()
+        ids = np.nonzero(live)[0]
+        for force in ("lsh", "linear"):
+            got = sh.query(q, R, force=force).neighbor_sets()
+            assert got == _fresh_sets(x[live], q, force, ext_ids=ids), force
+    finally:
+        drv.stop(flush=True)
+    sh.validate_locations()
+    assert sh.pending_merges == 0 and sh.staged_rows == 0
+
+
+def test_service_async_compaction_lifecycle(tmp_path):
+    """RetrievalService with async_compaction: driver lifecycle, tick
+    counting (only ticks that ran work), checkpoint flush barrier, and
+    restore/shutdown."""
+    from repro.configs import get_config, reduced_config
+    from repro.data import lm_batch
+    from repro.models import init_params
+    from repro.models.parallel import ParallelConfig
+    from repro.serve import RetrievalConfig, RetrievalService
+
+    par = ParallelConfig(mesh=None, attn_chunk_q=8, attn_chunk_k=8,
+                         logits_chunk=8, remat="none")
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, par, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64, delta_capacity=64,
+                                           compact_fanout=2,
+                                           async_compaction=True))
+
+    def batch(seed):
+        b = lm_batch(seed, 0, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        return b
+
+    assert svc.index_corpus([batch(3)]) == 32
+    assert svc.driver is not None and svc.driver.running
+    assert svc.index.policy.step_rows == 32       # async default budget
+
+    # a tick with no pending work is idle, not a compaction tick
+    svc.compaction_tick()
+    assert svc.stats["compaction_ticks"] == 0
+    assert svc.stats["idle_ticks"] == 1
+
+    # churn enough to freeze + schedule merges; ticks drain the swaps
+    new_ids = svc.add_documents([batch(4), batch(5), batch(6)])
+    assert len(new_ids) == 96
+    t_end = time.time() + 60
+    while svc.index.has_compaction_work and time.time() < t_end:
+        svc.compaction_tick()
+        time.sleep(0.002)
+    assert not svc.index.has_compaction_work
+    st = svc.stats
+    assert st["driver"]["worker_alive"]
+    assert st["driver"]["stage_calls"] > 0        # gathers ran off-thread
+    assert st["driver"]["applied"] > 0
+    assert st["compaction_ticks"] == st["driver"]["applied"]
+    assert st["compactions"] > 0
+
+    # queries still see everything that was added
+    res, _ = svc.query(batch(5))
+    found = sum(1 for i in range(32)
+                if set(res.neighbors(i).tolist()) & set(new_ids.tolist()))
+    assert found >= 28
+
+    # checkpoint flushes the driver: nothing half-staged in the snapshot
+    svc.remove_documents(new_ids[:40].tolist())
+    mgr = CheckpointManager(str(tmp_path))
+    svc.checkpoint(mgr, step=9)
+    assert mgr.latest_step() == 9
+    assert svc.stats["driver"]["staged_rows"] == 0
+    assert svc.stats["driver"]["pending_gathers"] == 0
+    n_at_ckpt = svc.index.n
+
+    # mutate past the checkpoint, then restore back to it
+    svc.remove_documents(new_ids[40:80].tolist())
+    assert svc.index.n == n_at_ckpt - 40
+    assert svc.restore(mgr) == 9
+    assert svc.index.n == n_at_ckpt
+    assert svc.driver.running                     # worker restarted
+
+    svc.shutdown()
+    assert svc.driver.running is False
