@@ -29,8 +29,9 @@ def main() -> None:
                          "--emit BENCH_async.json the serving-thread stall "
                          "comparison (tick-based vs async CompactionDriver), "
                          "--emit BENCH_rebalance.json the skewed-stream "
-                         "placement comparison (>= 2 host devices forced). "
-                         "Skips the paper tables")
+                         "placement comparison (>= 2 host devices forced), "
+                         "--emit BENCH_obs.json the observability overhead "
+                         "+ misroute-rate bench. Skips the paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
@@ -62,6 +63,27 @@ def main() -> None:
               f"{1e6 * rows['skew_latency_delta_s']:.1f},"
               f"linear-route p99 cut {rows['p99_keep_local_s'] / max(rows['p99_load_balance_s'], 1e-12):.2f}x; "
               f"padded-rows cut {rows['padded_rows_cut']:.2f}x")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "obs" in os.path.basename(args.emit):
+        from benchmarks import obs_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = obs_bench.main(scale, emit=args.emit)
+        print(f"obs_query_disabled,"
+              f"{1e6 * rows['query_s_disabled']:.1f},"
+              f"per {rows['n_queries']}-query batch, n={rows['n']}")
+        print(f"obs_query_enabled,"
+              f"{1e6 * rows['query_s_enabled']:.1f},"
+              f"overhead {100 * rows['obs_overhead_frac']:.2f}% at "
+              f"sample_every={rows['trace_sample_every']} "
+              f"(every-batch tracing: "
+              f"{100 * rows['trace_overhead_frac']:.1f}%)")
+        print(f"obs_misroute_rate,{0:.1f},"
+              f"{rows['misroute_rate']:.4f} over {rows['queries_traced']} "
+              f"traced queries; frac_lsh {rows['frac_lsh']:.2f}")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

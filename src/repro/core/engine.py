@@ -31,6 +31,7 @@ finalizing — host-side partitioning only happens in the single-host
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional, Protocol, Sequence, Tuple, Union
 
 import jax
@@ -100,6 +101,12 @@ class Segment(Protocol):
                lsh_route: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
         """Fixed-shape search -> sentinel-padded ``(ids, dists, mask)``."""
         ...
+
+    # Traced queries (``QueryEngine`` with a tracer) additionally call
+    # ``count_candidates(qbuckets) -> (Q,)``: the distinct candidates
+    # this segment's LSH route gathers (cap-truncated).  Both in-repo
+    # adapters implement it; a custom segment only needs it when
+    # tracing is enabled.
 
 
 def finalize_route(terms: Sequence[SegmentEstimate], cost_model: CostModel,
@@ -220,6 +227,12 @@ class TableSegment:
                 ids = jnp.where(mask, self.ext_ids[safe], EXT_SENTINEL)
         return ids, dists, mask
 
+    def count_candidates(self, qbuckets: jax.Array) -> jax.Array:
+        """(Q,) distinct candidates the LSH route gathers (cap-truncated,
+        tombstoned rows included — they cost gather + verification)."""
+        return search_lib.lsh_candidate_counts(self.tables, qbuckets,
+                                               self.cap, tidx=self.tidx)
+
 
 # ---------------------------------------------------------------------------
 # Query result + host-side partitioning helpers
@@ -322,11 +335,16 @@ class QueryEngine:
     pipeline that additionally partitions the batch.
     """
 
-    def __init__(self, cost_model: CostModel, impl: Optional[str] = None):
+    def __init__(self, cost_model: CostModel, impl: Optional[str] = None,
+                 tracer=None):
         """Args: ``cost_model`` — Algorithm 2 constants (alpha, beta);
-        ``impl`` — kernel impl override (e.g. ``"pallas_interpret"``)."""
+        ``impl`` — kernel impl override (e.g. ``"pallas_interpret"``);
+        ``tracer`` — optional ``repro.obs.QueryTracer`` (duck-typed, the
+        engine never imports obs).  ``query`` takes the traced path only
+        while ``tracer.enabled`` is true."""
         self.cost_model = cost_model
         self.impl = impl
+        self.tracer = tracer
 
     # traceable pieces (also used inside shard_map by the sharded paths)
     def estimate(self, segments: Sequence[Segment],
@@ -377,8 +395,59 @@ class QueryEngine:
         extract reported ids regardless of which strategy served each
         query.
         """
-        nq = queries.shape[0]
+        tracer = self.tracer
+        if tracer is None or not tracer.enabled or not tracer.sample():
+            nq = queries.shape[0]
+            route = self.estimate(segments, qbuckets)
+            if force == "lsh":
+                use = np.ones(nq, bool)
+            elif force == "linear":
+                use = np.zeros(nq, bool)
+            else:
+                use = np.asarray(route.use_lsh)
+            lsh_idx, lin_idx = partition_indices(use)
+
+            lsh_out = lin_out = None
+            if len(lsh_idx):
+                lsh_out = self.search_group(segments, qbuckets[lsh_idx],
+                                            queries[lsh_idx], float(r),
+                                            lsh_route=True)
+            if len(lin_idx):
+                lin_out = self.search_group(segments, qbuckets[lin_idx],
+                                            queries[lin_idx], float(r),
+                                            lsh_route=False)
+            return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
+                               lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
+        return self._query_traced(segments, queries, qbuckets, r, force)
+
+    def count_candidates(self, segments: Sequence[Segment],
+                         qbuckets: jax.Array) -> jax.Array:
+        """(Q,) distinct candidates the LSH route gathers, summed over
+        segments (segments hold disjoint docs, so the sum is exact)."""
+        total = segments[0].count_candidates(qbuckets)
+        for s in segments[1:]:
+            total = total + s.count_candidates(qbuckets)
+        return total
+
+    def _query_traced(self, segments: Sequence[Segment], queries: jax.Array,
+                      qbuckets: jax.Array, r: float,
+                      force: Optional[str]) -> QueryResult:
+        """``query`` with phase timing + span recording (same result).
+
+        Phase boundaries are ``block_until_ready``-synced so the timings
+        attribute device work to the phase that issued it — the reason
+        this is a separate method instead of timers in the fast path.
+        """
+        tracer = self.tracer
+        timings = {}
+        seg_seconds = None
+
+        t0 = time.perf_counter()
         route = self.estimate(segments, qbuckets)
+        jax.block_until_ready(route.lsh_cost)
+        timings["estimate"] = time.perf_counter() - t0
+
+        nq = queries.shape[0]
         if force == "lsh":
             use = np.ones(nq, bool)
         elif force == "linear":
@@ -387,15 +456,61 @@ class QueryEngine:
             use = np.asarray(route.use_lsh)
         lsh_idx, lin_idx = partition_indices(use)
 
+        per_segment = (getattr(tracer, "per_segment_timing", False)
+                       and len(segments) > 1)
+
+        def timed_group(idx, lsh_route, label):
+            t0 = time.perf_counter()
+            if per_segment:
+                parts, seg_t = [], []
+                for si, s in enumerate(segments):
+                    ts = time.perf_counter()
+                    p = s.search(qbuckets[idx], queries[idx], float(r),
+                                 lsh_route=lsh_route)
+                    jax.block_until_ready(p[2])
+                    seg_t.append((f"seg{si}", time.perf_counter() - ts))
+                    parts.append(p)
+                if len(parts) == 1:
+                    out = parts[0]
+                else:
+                    out = tuple(jnp.concatenate([p[i] for p in parts],
+                                                axis=-1) for i in range(3))
+                seg_seconds[label] = seg_t
+            else:
+                out = self.search_group(segments, qbuckets[idx],
+                                        queries[idx], float(r),
+                                        lsh_route=lsh_route)
+            jax.block_until_ready(out[2])
+            timings[label] = time.perf_counter() - t0
+            return out
+
+        if per_segment:
+            seg_seconds = {}
         lsh_out = lin_out = None
         if len(lsh_idx):
-            lsh_out = self.search_group(segments, qbuckets[lsh_idx],
-                                        queries[lsh_idx], float(r),
-                                        lsh_route=True)
+            lsh_out = timed_group(lsh_idx, True, "search_lsh")
         if len(lin_idx):
-            lin_out = self.search_group(segments, qbuckets[lin_idx],
-                                        queries[lin_idx], float(r),
-                                        lsh_route=False)
+            lin_out = timed_group(lin_idx, False, "search_linear")
+
+        t0 = time.perf_counter()
+        cand_actual = np.asarray(self.count_candidates(segments, qbuckets))
+        timings["count_actual"] = time.perf_counter() - t0
+
+        coll = np.asarray(route.collisions).astype(np.float64)
+        lsh_cost_actual = np.asarray(self.cost_model.lsh_cost(
+            coll, cand_actual.astype(np.float64)))
+        tracer.record_batch(
+            use_lsh=use,
+            collisions=coll,
+            cand_est=np.asarray(route.cand_est).astype(np.float64),
+            cand_actual=cand_actual,
+            lsh_cost_est=np.asarray(route.lsh_cost).astype(np.float64),
+            lsh_cost_actual=lsh_cost_actual,
+            linear_cost=float(np.asarray(route.linear_cost)),
+            probes=int(qbuckets.shape[1]),
+            forced=force,
+            phase_seconds=timings,
+            segment_seconds=seg_seconds)
         return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
                            lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
 

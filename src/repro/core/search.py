@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core.lsh.tables import LSHTables, gather_candidates
 from repro.kernels import ops
 
-__all__ = ["linear_search", "lsh_search", "dedupe_sorted", "rowwise_dist"]
+__all__ = ["linear_search", "lsh_search", "lsh_candidate_counts",
+           "dedupe_sorted", "rowwise_dist"]
 
 
 def rowwise_dist(rows: jax.Array, q: jax.Array, metric: str) -> jax.Array:
@@ -96,6 +97,25 @@ def linear_search(x: jax.Array, q: jax.Array, r: float, metric: str,
         flat = lambda a: a.reshape(nq, -1)
         return flat(ids), flat(dists), flat(mask)
     return chunk_fn(q)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def lsh_candidate_counts(tables: LSHTables, qbuckets: jax.Array, cap: int,
+                         tidx: jax.Array | None = None) -> jax.Array:
+    """(Q,) distinct candidates ``lsh_search`` would gather per query.
+
+    The observability counterpart of the alpha-term: the same
+    fixed-capacity gather + sort-dedup as ``lsh_search``, counting
+    instead of verifying — ids only, no row gather, no distance math —
+    so a traced query batch can compare the HLL candSize *estimate*
+    against the candidates actually scanned (cap-truncated, exactly
+    like the search; tombstoned rows included — they are gathered and
+    verified, so they are real work).
+    """
+    sentinel = tables.n
+    cands = gather_candidates(tables, qbuckets, cap, sentinel, tidx=tidx)
+    _, uniq = dedupe_sorted(cands, sentinel)
+    return jnp.sum(uniq, axis=-1, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk"))

@@ -21,6 +21,7 @@ serving thread only drains staged swaps).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Dict, Iterable, Optional, Sequence, Union
 
 import jax
@@ -33,6 +34,7 @@ from repro.core import CostModel
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
+from repro.obs import Observability, to_prometheus
 from repro.streaming import (CompactionDriver, CompactionPolicy,
                              DynamicHybridIndex,
                              ShardedDynamicHybridIndex)
@@ -74,6 +76,18 @@ class RetrievalConfig:
     # reports `shard_skew` (max/mean live load) and cumulative
     # `rows_moved` so skewed streams are visible and correctable.
     shard_placement: str = "keep_local"
+    # Observability (repro.obs; docs/observability.md): one bundle —
+    # metrics registry + per-query route tracer + compaction event log —
+    # shared by the service, the index, and the driver.  obs_enabled
+    # False builds the no-op variant (the query path short-circuits on
+    # it).  Per-query spans need the single-host index; the sharded
+    # index routes inside shard_map and gets events + phases only.
+    obs_enabled: bool = True
+    obs_trace_capacity: int = 256       # retained per-query spans
+    obs_events_capacity: int = 512      # event-log ring size
+    obs_trace_sample_every: int = 16    # trace every Nth batch (1 = all)
+    obs_per_segment_timing: bool = False
+    obs_dump_path: Optional[str] = None  # shutdown() metrics dump target
 
 
 class RetrievalService:
@@ -108,6 +122,26 @@ class RetrievalService:
         self._linear_served = 0
         self._compaction_ticks = 0
         self._idle_ticks = 0
+        self.obs = Observability.create(
+            enabled=rcfg.obs_enabled,
+            trace_capacity=rcfg.obs_trace_capacity,
+            events_capacity=rcfg.obs_events_capacity,
+            per_segment_timing=rcfg.obs_per_segment_timing,
+            trace_sample_every=rcfg.obs_trace_sample_every)
+        reg = self.obs.registry
+        self._m_queries = reg.counter(
+            "repro_service_queries_total", help="Queries served")
+        self._m_linear = reg.counter(
+            "repro_service_linear_total",
+            help="Queries served by the linear route")
+        self._m_ticks = reg.counter(
+            "repro_service_compaction_ticks_total",
+            help="Maintenance ticks that ran compaction work")
+        self._m_idle = reg.counter(
+            "repro_service_idle_ticks_total",
+            help="Maintenance ticks with nothing to do")
+        self._g_size = reg.gauge(
+            "repro_index_live_docs", help="Live documents in the index")
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Normalized (B, d_model) embeddings for one token batch."""
@@ -148,6 +182,7 @@ class RetrievalService:
                 tombstone_ratio=r.compact_tombstone_ratio,
                 fanout=r.compact_fanout,
                 step_rows=self._step_rows()))
+        common["obs"] = self.obs
         if r.mesh is not None:
             self.index = ShardedDynamicHybridIndex(
                 fam, mesh=r.mesh, data_axis=r.mesh_axis,
@@ -158,7 +193,8 @@ class RetrievalService:
         self.index.build(corpus)
         if r.async_compaction:
             self.driver = CompactionDriver(
-                self.index, budget_rows=self._step_rows()).start()
+                self.index, budget_rows=self._step_rows(),
+                obs=self.obs).start()
         return corpus.shape[0]
 
     # ------------------------------------------------------- live mutation
@@ -199,6 +235,8 @@ class RetrievalService:
         # exact per-query linear count from the route partition (the
         # frac_linear*n round-trip drifts under rounding)
         self._linear_served += res.n_linear
+        self._m_queries.inc(res.n_queries)
+        self._m_linear.inc(res.n_linear)
         return res, q
 
     def compaction_tick(self) -> bool:
@@ -218,13 +256,17 @@ class RetrievalService:
         if self.driver is not None:
             if self.driver.drain() > 0:
                 self._compaction_ticks += 1
+                self._m_ticks.inc()
             else:
                 self._idle_ticks += 1
+                self._m_idle.inc()
             return bool(self.index.has_compaction_work)
         if self.index.has_compaction_work:
             self._compaction_ticks += 1
+            self._m_ticks.inc()
         else:
             self._idle_ticks += 1
+            self._m_idle.inc()
         return bool(self.index.compact_step(self._step_rows()))
 
     # ------------------------------------------------- driver lifecycle
@@ -257,12 +299,51 @@ class RetrievalService:
             self.driver.start()
         return restored
 
-    def shutdown(self, flush: bool = True) -> None:
+    def shutdown(self, flush: bool = True,
+                 dump_path: Optional[str] = None) -> None:
         """Stop the driver worker; ``flush=True`` (default) completes
         pending merges inline first so no staging is orphaned.  Safe to
-        call with no driver or repeatedly."""
+        call with no driver or repeatedly.
+
+        When ``dump_path`` (or ``RetrievalConfig.obs_dump_path``) is
+        set and observability is enabled, the final ``metrics()``
+        snapshot is written there as JSON — the post-mortem record of
+        a serving run.
+        """
         if self.driver is not None:
             self.driver.stop(flush=flush)
+        self.obs.events.emit("shutdown", flush=flush,
+                             queries=self._queries_served)
+        path = dump_path or self.rcfg.obs_dump_path
+        if path and self.obs.enabled:
+            with open(path, "w") as f:
+                json.dump(self.metrics(), f, indent=2, sort_keys=True)
+
+    # --------------------------------------------------- export surfaces
+    def _sync_gauges(self) -> None:
+        self._g_size.set(self.index.n if self.index else 0)
+
+    def metrics(self) -> Dict[str, object]:
+        """One JSON-ready observability snapshot: the registry dump,
+        the tracer's routing/misroute summary, the event-log tail +
+        per-kind counts, and the ``stats`` dict — everything a scrape
+        or a shutdown dump needs in one call."""
+        self._sync_gauges()
+        return _jsonable({
+            "registry": self.obs.registry.snapshot(),
+            "tracing": self.obs.tracer.summary(),
+            "events": {
+                "counts_by_kind": self.obs.events.counts_by_kind(),
+                "dropped": self.obs.events.dropped,
+                "tail": self.obs.events.events(limit=50),
+            },
+            "stats": self.stats,
+        })
+
+    def metrics_text(self) -> str:
+        """The registry in Prometheus text exposition format."""
+        self._sync_gauges()
+        return to_prometheus(self.obs.registry)
 
     @property
     def stats(self) -> Dict[str, float]:
@@ -293,3 +374,21 @@ class RetrievalService:
         if self.driver is not None:
             out["driver"] = self.driver.stats()
         return out
+
+
+def _jsonable(obj):
+    """Recursively coerce numpy scalars/arrays (and tuple/dict-int keys)
+    to plain JSON types so ``json.dumps`` round-trips a metrics dump."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, (np.bool_, bool)):
+        return bool(obj)
+    if isinstance(obj, (np.integer, int)):
+        return int(obj)
+    if isinstance(obj, (np.floating, float)):
+        return float(obj)
+    return obj

@@ -29,6 +29,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.engine import partition_indices
+from repro.obs.metrics import NULL_REGISTRY
 
 
 @dataclasses.dataclass
@@ -39,17 +40,32 @@ class Request:
 
 class ShapeBucketScheduler:
     def __init__(self, max_batch: int = 64, min_bucket: int = 8,
-                 background_tick: Optional[Callable[[], Any]] = None):
+                 background_tick: Optional[Callable[[], Any]] = None,
+                 registry=None):
+        """``registry`` — optional ``repro.obs.MetricsRegistry``; the
+        default null registry makes every instrument a no-op."""
         self.max_batch = max_batch
         self.min_bucket = min_bucket
         self.background_tick = background_tick
         self.queue: List[Request] = []
         self._uid = 0
         self._ticks = 0
+        reg = registry if registry is not None else NULL_REGISTRY
+        self._m_submits = reg.counter(
+            "repro_scheduler_submits_total", help="Requests submitted")
+        self._m_batches = reg.counter(
+            "repro_scheduler_batches_total", help="Batches formed")
+        self._m_batch_size = reg.histogram(
+            "repro_scheduler_batch_size",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128),
+            help="Requests per formed batch (pre-padding)")
+        self._m_ticks = reg.counter(
+            "repro_scheduler_ticks_total", help="Background ticks run")
 
     def submit(self, payload) -> int:
         self._uid += 1
         self.queue.append(Request(self._uid, payload))
+        self._m_submits.inc()
         return self._uid
 
     def _bucket(self, k: int) -> int:
@@ -71,8 +87,11 @@ class ShapeBucketScheduler:
         """
         take = self.queue[:self.max_batch]
         self.queue = self.queue[len(take):]
+        self._m_batches.inc()
+        self._m_batch_size.observe(len(take))
         if self.background_tick is not None:
             self._ticks += 1
+            self._m_ticks.inc()
             self.background_tick()
         return take, self._bucket(len(take))
 

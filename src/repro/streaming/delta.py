@@ -118,6 +118,11 @@ class DeltaView:
                                   impl=self.impl, tidx=self.tidx)
         return jnp.where(mask, ids, EXT_SENTINEL), dists, mask
 
+    def count_candidates(self, qbuckets: jax.Array) -> jax.Array:
+        """(Q,) distinct colliding delta rows — exact, the delta keeps
+        no sketches and its LSH route has no gather cap."""
+        return collision_stats(self.delta, qbuckets, tidx=self.tidx)[1]
+
 
 def _row_buckets(delta: DeltaSegment,
                  tidx: jax.Array | None) -> jax.Array:

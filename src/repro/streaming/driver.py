@@ -88,11 +88,20 @@ class CompactionDriver:
     """
 
     def __init__(self, index, *, budget_rows: Optional[int] = None,
-                 poll_s: float = 0.02, name: str = "compaction-driver"):
+                 poll_s: float = 0.02, name: str = "compaction-driver",
+                 obs=None):
         self.index = index
         self.budget_rows = budget_rows
         self.poll_s = float(poll_s)
         self.name = name
+        # share the index's event log by default so driver lifecycle
+        # interleaves with freeze/swap events in one stream
+        if obs is None:
+            obs = getattr(index, "obs", None)
+        if obs is None:
+            from repro.obs import Observability
+            obs = Observability.disabled()
+        self.obs = obs
         # one lock excludes worker staging from control-thread swaps;
         # staging never blocks serving for longer than one budgeted
         # gather because the worker re-acquires per stage_step call
@@ -122,12 +131,15 @@ class CompactionDriver:
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=self.name)
         self._thread.start()
+        self.obs.events.emit("driver_start", name=self.name,
+                             budget_rows=self.budget_rows)
         return self
 
     def stop(self, flush: bool = False) -> None:
         """CONTROL-THREAD ONLY: join the worker; optionally finish all
         pending merge work inline afterwards (``flush=True``) so no
         staging is left orphaned.  Idempotent; ``start()`` restarts."""
+        was_running = self.running
         self._stop.set()
         self._wake.set()
         if self._thread is not None:
@@ -135,6 +147,8 @@ class CompactionDriver:
             if self._thread.is_alive():       # pragma: no cover
                 self._errors.append("stop: worker join timed out")
             self._thread = None
+        if was_running:
+            self.obs.events.emit("driver_stop", name=self.name, flush=flush)
         if flush:
             self.flush()
 
@@ -183,6 +197,8 @@ class CompactionDriver:
                     self.index.stage_step(1 << 30)   # stage the remainder
         if applied:
             self._applied += applied
+        self.obs.events.emit("flush_barrier", name=self.name,
+                             applied=applied)
         return applied
 
     # ------------------------------------------------------------- worker
@@ -209,6 +225,10 @@ class CompactionDriver:
                         if status != "idle":
                             self._stage_calls += 1
                             did_work = True
+                        if status == "ready":
+                            self.obs.events.emit(
+                                "stage_ready",
+                                staged_rows=int(self.index.staged_rows))
             except Exception as e:    # control reset state mid-stage
                 # (compact()/restore without stop(): defensive — abandon
                 # the gather, the re-derived schedule restages)
@@ -229,6 +249,9 @@ class CompactionDriver:
         ``worker_alive``, plus cumulative ``stage_calls`` / ``prepares``
         (worker gathers and pre-builds), ``drains`` / ``applied`` /
         ``flushes`` (control-thread side), and ``worker_errors``.
+        ``work_seconds`` is the index's per-phase compaction-work
+        accumulator — the same dict ``index_stats()`` reports, never a
+        second measurement.
         """
         return {
             "worker_alive": self.running,
@@ -242,6 +265,8 @@ class CompactionDriver:
             "applied": self._applied,
             "flushes": self._flushes,
             "worker_errors": len(self._errors),
+            "work_seconds": dict(
+                getattr(self.index, "compaction_work_seconds", None) or {}),
         }
 
     def __repr__(self) -> str:

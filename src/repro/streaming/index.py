@@ -48,6 +48,8 @@ from repro.core.engine import (QueryEngine, QueryResult, RouteEstimate,
                                TableSegment, _pad_size)
 from repro.core.lsh.families import bucket_fn_for
 from repro.core.lsh.tables import LSHTables
+from repro.obs import Observability
+from repro.obs.metrics import WorkPhases
 from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
@@ -75,7 +77,8 @@ class DynamicHybridIndex:
                  cap: int = 64, delta_capacity: int = 4096,
                  cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
                  policy: CompactionPolicy = CompactionPolicy(),
-                 key: jax.Array | int = 0, impl: Optional[str] = None):
+                 key: jax.Array | int = 0, impl: Optional[str] = None,
+                 obs: Optional[Observability] = None):
         """Args:
           family: LSH family (``make_family``); owns metric + hashes.
           num_buckets: buckets per table B.
@@ -86,6 +89,8 @@ class DynamicHybridIndex:
           policy: freeze/merge triggers (``CompactionPolicy``).
           key: PRNG key (or int seed) for the family parameters.
           impl: kernel impl override (e.g. ``"pallas_interpret"``).
+          obs: observability bundle (tracer + event log + registry);
+            default is a fresh disabled bundle — no cost unless asked.
         """
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
@@ -98,10 +103,15 @@ class DynamicHybridIndex:
         self.cost_model = cost_model
         self.policy = policy
         self.impl = impl
-        self._engine = QueryEngine(cost_model, impl=impl)
+        self.obs = obs if obs is not None else Observability.disabled()
+        # Index-owned so the numbers survive stack resets
+        # (build/compact/load_state_dict replace the SegmentStack).
+        self.phases = WorkPhases("stage", "build", "apply", "full")
+        self._engine = QueryEngine(cost_model, impl=impl,
+                                   tracer=self.obs.tracer)
         self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
 
-        self.stack = SegmentStack()
+        self.stack = SegmentStack(phases=self.phases)
         self.delta: Optional[delta_lib.DeltaSegment] = None
         self.stats = CompactionStats()
         # Host bookkeeping: ext id -> ("m", uid, row) | ("d", slot).
@@ -150,7 +160,7 @@ class DynamicHybridIndex:
         else:
             ids = np.asarray(ids, np.int64)
             assert len(set(ids.tolist())) == len(ids), "duplicate ids"
-        self.stack = SegmentStack()
+        self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         if x.shape[0] > 0:
             self._add_frozen(x, ids,
@@ -292,6 +302,7 @@ class DynamicHybridIndex:
             return
         self._add_frozen(x, ext, level=0, bucket_rows=bids)
         self.stats.record_freeze(len(ext))
+        self.obs.events.emit("freeze", rows=len(ext), reason=reason)
 
     def _maybe_compact(self) -> None:
         if self.delta is not None:
@@ -319,7 +330,9 @@ class DynamicHybridIndex:
                 n_dead=self.stack.n_dead, n_live=self.stack.n_live,
                 unit=self.delta_capacity, can_full=not pend):
             uids = [s.uid for s in free if src is None or s.level == src]
-            self.stack.schedule(uids, target, reason)
+            if self.stack.schedule(uids, target, reason):
+                self.obs.events.emit("merge_scheduled", uids=uids,
+                                     target_level=target, reason=reason)
 
     def compact_step(self, budget_rows: Optional[int] = None) -> bool:
         """Advance pending merge work by one bounded step (off-query-path
@@ -348,6 +361,10 @@ class DynamicHybridIndex:
         self.stats.record_merge(res.target_level, len(res.moved),
                                 res.steps, res.seconds, res.dropped,
                                 reason=res.reason)
+        self.obs.events.emit("swap", target_level=res.target_level,
+                             rows=len(res.moved), dropped=res.dropped,
+                             steps=res.steps, seconds=res.seconds,
+                             reason=res.reason)
         self._schedule_merges()          # cascade up the levels
 
     # ---------------------------------------------- driver (async) surface
@@ -460,7 +477,7 @@ class DynamicHybridIndex:
         d = self.delta.x.shape[1] if self.delta is not None else (
             x.shape[1] if x.ndim > 1 else 1)
         dtype = self.delta.x.dtype if self.delta is not None else x.dtype
-        self.stack = SegmentStack()
+        self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         if len(ext):
             self._add_frozen(x, ext,
@@ -469,6 +486,11 @@ class DynamicHybridIndex:
                              bucket_rows=bids)
         self._reset_delta(d, dtype)
         self.stats.record(reason, t0, dropped)
+        # record() measured the fold from t0; reuse its number — one
+        # measurement, reported by both stats and the phase accumulator.
+        self.phases.add("full", self.stats.last_seconds)
+        self.obs.events.emit("full_compact", reason=reason, dropped=dropped,
+                             seconds=self.stats.last_seconds)
 
     # ------------------------------------------------------------- query
     def _segments(self, tidx: Optional[jax.Array] = None) -> List:
@@ -528,11 +550,20 @@ class DynamicHybridIndex:
                                   float(r), force=force)
 
     # ------------------------------------------------------ observability
+    @property
+    def compaction_work_seconds(self) -> Dict[str, float]:
+        """Per-phase compaction work (stage/build/apply/full + total) —
+        the one accumulator behind ``index_stats()["work_seconds"]`` and
+        the driver's ``stats()["work_seconds"]``, so the two surfaces
+        can never disagree or double-count."""
+        return self.phases.as_dict()
+
     def index_stats(self) -> Dict[str, object]:
         """Size/level/compaction counters snapshot (host ints/dicts):
         ``n_live``/``n_main``/``n_main_dead``, delta fill, segment and
-        per-level counts, pending merges, and every cumulative
-        ``CompactionStats`` counter (freezes, merges_per_level, ...)."""
+        per-level counts, pending merges, per-phase ``work_seconds``,
+        and every cumulative ``CompactionStats`` counter (freezes,
+        merges_per_level, ...)."""
         out = {
             "n_live": self.n,
             "n_main": self.stack.n_rows,
@@ -545,6 +576,7 @@ class DynamicHybridIndex:
             "pending_merges": len(self.stack.tasks),
             "inserts": self._inserts,
             "deletes": self._deletes,
+            "work_seconds": self.compaction_work_seconds,
         }
         out.update(self.stats.as_dict())
         return out
@@ -600,7 +632,7 @@ class DynamicHybridIndex:
         """Restore stack + delta state saved by ``state_dict``."""
         self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
         self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
-        self.stack = SegmentStack()
+        self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         segs = dict(state.get("segments") or {})
         ms = state.get("main")

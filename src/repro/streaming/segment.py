@@ -29,7 +29,6 @@ a merge never resurrects dead rows.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,6 +37,7 @@ import numpy as np
 
 from repro.core.engine import _pad_size
 from repro.core.lsh.tables import LSHTables, build_tables
+from repro.obs.metrics import WorkPhases, time_block
 from repro.streaming import tombstones as tomb_lib
 
 __all__ = ["MainSegment", "build_main", "FrozenSegment", "freeze_segment",
@@ -243,10 +243,18 @@ class SegmentStack:
     from staging — the driver's lock does exactly that.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, phases: Optional[WorkPhases] = None) -> None:
         self.segments: List[FrozenSegment] = []
         self.tasks: List[MergeTask] = []     # FIFO; tasks[0] is active
         self._next_uid = 0
+        # Shared work-phase accumulator (the index passes its own so the
+        # numbers survive stack resets).  Every timed interval below is
+        # measured ONCE and added to both ``task.work_seconds`` (the
+        # per-merge total flowing into ``MergeResult.seconds``) and a
+        # phase here — "stage" (gather+hash), "build" (speculative
+        # prepare), "apply" (swap half).
+        self.phases = phases if phases is not None else WorkPhases(
+            "stage", "build", "apply", "full")
 
     # ------------------------------------------------------------- intro
     def next_uid(self) -> int:
@@ -335,15 +343,18 @@ class SegmentStack:
             return None
         task = self.tasks[0]
         task.steps += 1
-        t0 = time.perf_counter()
         res = None
         if not task.staged_done:
-            self._stage(task, max(int(budget_rows), 1))
+            with time_block(phases=self.phases, phase="stage") as tb:
+                self._stage(task, max(int(budget_rows), 1))
+            task.work_seconds += tb.elapsed
         if task.staged_done:
             # tiny merges finish in the same step when the budget
             # covered every row — the build below is their swap
-            res = self._finalize(task, num_buckets, m, bucket_fn, params)
-        task.work_seconds += time.perf_counter() - t0
+            with time_block(phases=self.phases, phase="apply") as tb:
+                res = self._finalize(task, num_buckets, m, bucket_fn,
+                                     params)
+            task.work_seconds += tb.elapsed
         if res is not None:
             res.seconds = task.work_seconds
         return res
@@ -363,9 +374,9 @@ class SegmentStack:
         if task.staged_done:
             return "ready"
         task.steps += 1
-        t0 = time.perf_counter()
-        self._stage(task, max(int(budget_rows), 1))
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="stage") as tb:
+            self._stage(task, max(int(budget_rows), 1))
+        task.work_seconds += tb.elapsed
         return "ready" if task.staged_done else "staging"
 
     def prepare_staged(self, bucket_fn, params, num_buckets: int,
@@ -387,14 +398,14 @@ class SegmentStack:
         if not task.staged_done or task.prepared is not None \
                 or not task.rows:
             return False
-        t0 = time.perf_counter()
-        x = np.concatenate(task.rows, axis=0)
-        ids = np.concatenate(task.ids, axis=0)
-        bids = np.concatenate(task.bids, axis=0)
-        task.prepared = freeze_segment(
-            x, ids, bucket_fn, params, num_buckets, m,
-            uid=-1, level=task.target_level, bucket_rows=bids)
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="build") as tb:
+            x = np.concatenate(task.rows, axis=0)
+            ids = np.concatenate(task.ids, axis=0)
+            bids = np.concatenate(task.bids, axis=0)
+            task.prepared = freeze_segment(
+                x, ids, bucket_fn, params, num_buckets, m,
+                uid=-1, level=task.target_level, bucket_rows=bids)
+        task.work_seconds += tb.elapsed
         return True
 
     def apply_staged(self, bucket_fn, params, num_buckets: int,
@@ -410,9 +421,9 @@ class SegmentStack:
             return None
         task = self.tasks[0]
         task.steps += 1
-        t0 = time.perf_counter()
-        res = self._finalize(task, num_buckets, m, bucket_fn, params)
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="apply") as tb:
+            res = self._finalize(task, num_buckets, m, bucket_fn, params)
+        task.work_seconds += tb.elapsed
         res.seconds = task.work_seconds
         return res
 

@@ -69,6 +69,8 @@ from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
                                _pad_size, compact_results, finalize_route)
 from repro.core.lsh.tables import LSHTables, build_tables
 from repro.core import hll as hll_lib
+from repro.obs import Observability
+from repro.obs.metrics import WorkPhases, time_block
 from repro.streaming import delta as delta_lib
 from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import (CompactionPolicy, CompactionStats,
@@ -173,7 +175,8 @@ class ShardedDynamicHybridIndex:
                  placement: "str | PlacementPolicy" = "keep_local",
                  routing: str = "per_shard", max_out: int = 512,
                  data_axis: str = "data", key: jax.Array | int = 0,
-                 impl: Optional[str] = None):
+                 impl: Optional[str] = None,
+                 obs: Optional[Observability] = None):
         """Args:
           family: LSH family (``make_family``); owns metric + hashes.
           num_buckets: buckets per table B; rows hash into [0, B), pad
@@ -194,6 +197,9 @@ class ShardedDynamicHybridIndex:
           data_axis: mesh axis name to shard rows over.
           key: PRNG key (or int seed) for the family parameters.
           impl: kernel impl override (e.g. ``"pallas_interpret"``).
+          obs: observability bundle — events + work phases only here;
+            per-query tracing needs the host-side single-index path
+            (routing runs inside ``shard_map`` on this index).
         """
         assert routing in ("global", "per_shard"), routing
         if isinstance(key, int):
@@ -216,6 +222,8 @@ class ShardedDynamicHybridIndex:
         self._engine = QueryEngine(cost_model, impl=impl)
         self._shard = NamedSharding(mesh, P(data_axis))
         self.stats = CompactionStats()
+        self.obs = obs if obs is not None else Observability.disabled()
+        self.phases = WorkPhases("stage", "build", "apply", "full")
 
         # device state; delta None until first use
         self._levels: List[_ShardLevel] = []
@@ -651,6 +659,7 @@ class ShardedDynamicHybridIndex:
             return
         self._make_level(parts, level=0)
         self.stats.record_freeze(total)
+        self.obs.events.emit("freeze", rows=total, reason=reason)
 
     def _maybe_compact(self) -> None:
         if self._delta is not None:
@@ -684,6 +693,8 @@ class ShardedDynamicHybridIndex:
                 self._tasks.append(_ShardMergeTask(
                     uids=uids, target_level=target,
                     reason=reason, shards=self.shards))
+                self.obs.events.emit("merge_scheduled", uids=uids,
+                                     target_level=target, reason=reason)
 
     @property
     def has_compaction_work(self) -> bool:
@@ -725,9 +736,9 @@ class ShardedDynamicHybridIndex:
                      or max(self.delta_capacity, 1))
         task.steps += 1
         self.stats.record_step()
-        t0 = time.perf_counter()
-        self._stage(task, budget)
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="stage") as tb:
+            self._stage(task, budget)
+        task.work_seconds += tb.elapsed
         return "ready" if task.staged_done else "staging"
 
     def prepare_staged(self) -> bool:
@@ -757,12 +768,13 @@ class ShardedDynamicHybridIndex:
         task = self._tasks[0]
         task.steps += 1
         self.stats.record_step()
-        t0 = time.perf_counter()
-        total, dropped, moved = self._finalize_merge(task)
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="apply") as tb:
+            total, dropped, moved = self._finalize_merge(task)
+        task.work_seconds += tb.elapsed
         self.stats.record_merge(task.target_level, total, task.steps,
                                 task.work_seconds, dropped,
                                 reason=task.reason, moved=moved)
+        self._emit_swap(task, total, dropped, moved)
         self._schedule_merges()       # cascade up the levels
         return True
 
@@ -778,19 +790,31 @@ class ShardedDynamicHybridIndex:
         task = self._tasks[0]
         task.steps += 1
         self.stats.record_step()
-        t0 = time.perf_counter()
         if not task.staged_done:
-            self._stage(task, budget)
+            with time_block(phases=self.phases, phase="stage") as tb:
+                self._stage(task, budget)
+            task.work_seconds += tb.elapsed
             if not task.staged_done:
-                task.work_seconds += time.perf_counter() - t0
                 return True
-        total, dropped, moved = self._finalize_merge(task)
-        task.work_seconds += time.perf_counter() - t0
+        with time_block(phases=self.phases, phase="apply") as tb:
+            total, dropped, moved = self._finalize_merge(task)
+        task.work_seconds += tb.elapsed
         self.stats.record_merge(task.target_level, total, task.steps,
                                 task.work_seconds, dropped,
                                 reason=task.reason, moved=moved)
+        self._emit_swap(task, total, dropped, moved)
         self._schedule_merges()       # cascade up the levels
         return bool(self._tasks)
+
+    def _emit_swap(self, task: "_ShardMergeTask", total: int, dropped: int,
+                   moved: int) -> None:
+        self.obs.events.emit("swap", target_level=task.target_level,
+                             rows=total, dropped=dropped, steps=task.steps,
+                             seconds=task.work_seconds, reason=task.reason)
+        if moved:
+            self.obs.events.emit("rebalance", rows_moved=moved,
+                                 target_level=task.target_level,
+                                 placement=self.placement.name)
 
     def _stage(self, task: _ShardMergeTask, budget: int) -> None:
         pairs = task.pairs
@@ -913,6 +937,11 @@ class ShardedDynamicHybridIndex:
             self._make_level(parts, self.policy.level_for(
                 total, self.delta_capacity))
         self.stats.record(reason, t0, dropped)
+        # record() measured the fold from t0; reuse its number — one
+        # measurement, reported by both stats and the phase accumulator.
+        self.phases.add("full", self.stats.last_seconds)
+        self.obs.events.emit("full_compact", reason=reason, dropped=dropped,
+                             seconds=self.stats.last_seconds)
 
     # ------------------------------------------------------------- query
     def query(self, queries: jax.Array, r: float,
@@ -1123,9 +1152,17 @@ class ShardedDynamicHybridIndex:
             "routing": self.routing,
             "inserts": self._inserts,
             "deletes": self._deletes,
+            "work_seconds": self.compaction_work_seconds,
         }
         out.update(self.stats.as_dict())
         return out
+
+    @property
+    def compaction_work_seconds(self) -> Dict[str, float]:
+        """Per-phase compaction work (stage/build/apply/full + total) —
+        the same accumulator the driver's ``stats()`` reports, so the
+        two surfaces can never disagree or double-count."""
+        return self.phases.as_dict()
 
     # -------------------------------------------------------- checkpoint
     def state_dict(self) -> Dict[str, Dict[str, np.ndarray]]:

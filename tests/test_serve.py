@@ -1,5 +1,6 @@
 """Serving layer: generation loop, retrieval service, scheduler."""
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -169,3 +170,100 @@ def test_scheduler_pow2_bucketing():
     assert len(reqs) == 5 and padded == 8
     reqs, padded = sched.next_batch()
     assert len(reqs) == 0 and padded == 0
+
+
+def test_scheduler_empty_drain_and_tick_monotone():
+    """Draining an empty queue is a well-formed no-op batch, and ticks
+    increase by exactly one per next_batch when a background_tick is
+    registered — never without one."""
+    calls = []
+    sched = ShapeBucketScheduler(max_batch=8, min_bucket=4,
+                                 background_tick=lambda: calls.append(1))
+    assert sched.ticks == 0
+    seen = []
+    for _ in range(3):                  # empty drains still tick
+        reqs, padded = sched.next_batch()
+        assert reqs == [] and padded == 0
+        seen.append(sched.ticks)
+    assert seen == [1, 2, 3] and len(calls) == 3
+
+    plain = ShapeBucketScheduler(max_batch=8)
+    plain.submit("x")
+    plain.next_batch()
+    assert plain.ticks == 0             # no hook, no ticks
+
+
+def test_scheduler_all_linear_route_and_group():
+    from repro.serve.scheduler import route_and_group
+    use_lsh = np.zeros(10, bool)
+    lsh_idx, lin_idx = route_and_group(use_lsh, min_bucket=4)
+    assert len(lsh_idx) == 0            # empty group stays empty, no pad
+    # the linear group covers every query, padded to pow2 by repetition
+    assert set(lin_idx.tolist()) == set(range(10))
+    assert len(lin_idx) == 16
+    # all-LSH mirror
+    lsh_idx2, lin_idx2 = route_and_group(~use_lsh, min_bucket=4)
+    assert len(lin_idx2) == 0
+    assert set(lsh_idx2.tolist()) == set(range(10))
+
+
+def test_scheduler_registry_instruments():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry(enabled=True)
+    sched = ShapeBucketScheduler(max_batch=8, min_bucket=4, registry=reg,
+                                 background_tick=lambda: None)
+    for i in range(5):
+        sched.submit(i)
+    sched.next_batch()
+    snap = reg.snapshot()
+    assert snap["counters"]["repro_scheduler_submits_total"] == 5
+    assert snap["counters"]["repro_scheduler_batches_total"] == 1
+    assert snap["counters"]["repro_scheduler_ticks_total"] == 1
+    assert snap["histograms"]["repro_scheduler_batch_size"]["count"] == 1
+
+
+def test_retrieval_service_stats_schema_and_metrics(tmp_path):
+    """stats keys match the documented schema exactly; metrics() is one
+    JSON round-trippable snapshot; shutdown dumps it to disk."""
+    from repro.obs.schema import WORK_PHASE_KEYS, retrieval_stats_keys
+
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64, delta_capacity=128,
+                                           async_compaction=True,
+                                           obs_trace_sample_every=1))
+    corpus = []
+    for i in range(2):
+        b = lm_batch(3, i, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        corpus.append(b)
+    svc.index_corpus(corpus)
+
+    st = svc.stats
+    assert set(st) == retrieval_stats_keys(driver=True)
+    assert set(st["work_seconds"]) == WORK_PHASE_KEYS
+    from repro.obs.schema import DRIVER_STATS_KEYS
+    assert set(st["driver"]) == DRIVER_STATS_KEYS
+
+    qb = lm_batch(4, 0, batch=8, seq=12, vocab=cfg.vocab, cfg=cfg)
+    qb.pop("labels")
+    svc.query(qb)
+
+    m = svc.metrics()
+    m2 = json.loads(json.dumps(m))      # round-trip
+    assert set(m2) == {"registry", "tracing", "events", "stats"}
+    assert m2["registry"]["counters"]["repro_service_queries_total"] == 8
+    assert m2["tracing"]["queries"] == 8
+    assert m2["stats"]["queries"] == 8
+    text = svc.metrics_text()
+    assert "# TYPE repro_service_queries_total counter" in text
+    assert "repro_index_live_docs 64" in text
+
+    dump = tmp_path / "obs_dump.json"
+    svc.shutdown(dump_path=str(dump))
+    dumped = json.loads(dump.read_text())
+    assert dumped["stats"]["queries"] == 8
+    assert dumped["events"]["counts_by_kind"].get("shutdown") == 1
