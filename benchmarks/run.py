@@ -31,7 +31,9 @@ def main() -> None:
                          "--emit BENCH_rebalance.json the skewed-stream "
                          "placement comparison (>= 2 host devices forced), "
                          "--emit BENCH_obs.json the observability overhead "
-                         "+ misroute-rate bench. Skips the paper tables")
+                         "+ misroute-rate bench, --emit BENCH_kernels.json "
+                         "the fused-vs-composed kernel comparison. Skips "
+                         "the paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
@@ -63,6 +65,19 @@ def main() -> None:
               f"{1e6 * rows['skew_latency_delta_s']:.1f},"
               f"linear-route p99 cut {rows['p99_keep_local_s'] / max(rows['p99_load_balance_s'], 1e-12):.2f}x; "
               f"padded-rows cut {rows['padded_rows_cut']:.2f}x")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "kernel" in os.path.basename(args.emit):
+        from benchmarks import kernel_bench
+        t0 = time.time()
+        out = kernel_bench.main(scale, emit=args.emit)
+        worst = min(r["fused_speedup_composed"]
+                    for k, r in out["routes"].items())
+        print(f"kernel_fused_min_speedup,{0:.1f},"
+              f"{worst:.2f}x composed (impl={out['impl']}, "
+              f"tpu={out['on_tpu']})")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

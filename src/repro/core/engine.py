@@ -215,7 +215,7 @@ class TableSegment:
             qc = self.q_chunk or min(32, q.shape[0])
             ids, dists, mask = search_lib.lsh_search(
                 self.x, self.tables, qbuckets, q, r, self.metric, self.cap,
-                q_chunk=qc, tidx=self.tidx)
+                q_chunk=qc, tidx=self.tidx, impl=self.impl)
         else:
             ids, dists, mask = search_lib.linear_search(
                 self.x, q, r, self.metric, impl=self.impl)
@@ -510,7 +510,8 @@ class QueryEngine:
             probes=int(qbuckets.shape[1]),
             forced=force,
             phase_seconds=timings,
-            segment_seconds=seg_seconds)
+            segment_seconds=seg_seconds,
+            kernel_impl=ops.resolve_impl(self.impl))
         return QueryResult(route=route, lsh_idx=lsh_idx, lin_idx=lin_idx,
                            lsh_out=lsh_out, lin_out=lin_out, n_queries=nq)
 

@@ -1,16 +1,30 @@
 """The two search strategies the hybrid router chooses between.
 
-Both are batched, fixed-shape, jittable functions (TPU execution model):
+Both are batched, fixed-shape, jittable functions (TPU execution model),
+and both now run through the fused Pallas scan kernels
+(``kernels/fused_scan.py``) behind the ``ops`` dispatch:
 
-  * ``linear_search``     — Pallas-blocked brute-force scan (Eq. 2 cost).
-  * ``lsh_search``        — fixed-capacity bucket gather, sort-based
-                            dedup, rowwise candidate verification
-                            (Eq. 1 cost: alpha-term = gather+dedup,
-                            beta-term = verification).
+  * ``linear_search``     — fused brute-force scan (Eq. 2 cost):
+                            distance + threshold + report mask + ids in
+                            one kernel pass over (Q, N) tiles.
+  * ``lsh_search``        — fixed-capacity bucket gather, then the fused
+                            verification kernel: sorted-run dedup +
+                            row gather + rowwise distance + threshold
+                            over (Q, C) candidate tiles (Eq. 1 cost:
+                            alpha-term = gather+dedup, beta-term =
+                            verification).
+
+On non-TPU backends (and under ``impl="ref"``) both dispatch to the
+composed jnp oracles in ``kernels/ref.py`` — same results, bit-exact.
 
 Reporting semantics: every function returns ``(ids, dists, mask)`` where
 ``mask[q, i]`` marks a reported r-near neighbor of query q.  Buffers are
 sentinel-padded; ``mask`` already excludes padding.
+
+Query batches are processed in fixed ``q_chunk`` slices so the
+per-chunk working set stays bounded; batches that are not a chunk
+multiple are padded up and the results sliced back (a 33-query batch
+runs as two 32-query chunks, never as one (33, n) buffer).
 """
 from __future__ import annotations
 
@@ -22,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.lsh.tables import LSHTables, gather_candidates
 from repro.kernels import ops
+from repro.kernels import ref as _ref
 
 __all__ = ["linear_search", "lsh_search", "lsh_candidate_counts",
            "dedupe_sorted", "rowwise_dist"]
@@ -33,25 +48,10 @@ def rowwise_dist(rows: jax.Array, q: jax.Array, metric: str) -> jax.Array:
     Used for candidate verification (gather-bound, so plain VPU math;
     the full-scan MXU kernel wouldn't help on already-gathered rows).
     L2 returns squared distance, consistent with ops.pairwise_dist.
+    Delegates to ``kernels.ref.rowwise_dist`` — the expression the fused
+    LSH-route kernel replicates tile-by-tile.
     """
-    if metric == "hamming":
-        from repro.kernels.ref import popcount_u32
-        x = rows.astype(jnp.uint32) ^ q[..., None, :].astype(jnp.uint32)
-        return jnp.sum(popcount_u32(x), axis=-1).astype(jnp.float32)
-    rows = rows.astype(jnp.float32)
-    q = q.astype(jnp.float32)[..., None, :]
-    if metric == "l2":
-        d = rows - q
-        return jnp.sum(d * d, axis=-1)
-    if metric == "l1":
-        return jnp.sum(jnp.abs(rows - q), axis=-1)
-    if metric == "cosine":
-        rn = rows / jnp.maximum(
-            jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-12)
-        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True),
-                             1e-12)
-        return 1.0 - jnp.sum(rn * qn, axis=-1)
-    raise ValueError(metric)
+    return _ref.rowwise_dist(rows, q, metric)
 
 
 def dedupe_sorted(cands: jax.Array, sentinel: int) -> Tuple[jax.Array, jax.Array]:
@@ -60,6 +60,9 @@ def dedupe_sorted(cands: jax.Array, sentinel: int) -> Tuple[jax.Array, jax.Array
     cands: (Q, C) int32 with sentinel padding.  Returns (sorted_ids,
     first_occurrence_mask).  This is the TPU replacement for the paper's
     hash-set duplicate removal; its cost is the alpha-term of Eq. (1).
+    The fused LSH kernel applies the same run-boundary mask in-kernel
+    (``ids != prev``); this helper remains the counting path
+    (``lsh_candidate_counts``) and the oracle's reference.
     """
     s = jnp.sort(cands, axis=-1)
     first = jnp.concatenate(
@@ -68,34 +71,42 @@ def dedupe_sorted(cands: jax.Array, sentinel: int) -> Tuple[jax.Array, jax.Array
     return s, first & (s < sentinel)
 
 
+def _chunked(chunk_fn, args, nq: int, q_chunk: int, pad_values):
+    """Run ``chunk_fn`` over fixed q_chunk slices of per-query arrays.
+
+    Pads every array in ``args`` up to the next chunk multiple (with its
+    entry in ``pad_values``) so *no* batch size falls back to the
+    full-materialization path, then slices the (nq, ...) results back.
+    """
+    padded = tuple(ops.pad_to(a, q_chunk, 0, value=v)
+                   for a, v in zip(args, pad_values))
+    nb = padded[0].shape[0] // q_chunk
+    reshaped = tuple(a.reshape(nb, q_chunk, *a.shape[1:]) for a in padded)
+    ids, dists, mask = jax.lax.map(
+        chunk_fn, reshaped if len(reshaped) > 1 else reshaped[0])
+    flat = lambda a: a.reshape(nb * q_chunk, -1)[:nq]
+    return flat(ids), flat(dists), flat(mask)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "impl", "q_chunk"))
 def linear_search(x: jax.Array, q: jax.Array, r: float, metric: str,
                   impl: str | None = None, q_chunk: int = 32):
     """Brute-force scan. Returns (ids (Q,n), dists (Q,n), mask (Q,n)).
 
-    Queries are processed in chunks of ``q_chunk`` (mirroring
-    ``lsh_search``) so the kernel's intermediate working set stays
-    bounded on large corpora; the (Q, n) result buffers are the
-    reporting contract and are unchanged.
+    One fused kernel per chunk: distances, threshold compare, report
+    mask, and candidate ids leave the kernel together (``ops.
+    fused_linear_scan``); the composed pipeline never materializes.
+    Queries are processed in chunks of ``q_chunk`` (padded up to a chunk
+    multiple when needed) so the kernel's working set stays bounded on
+    large corpora; the (Q, n) result buffers are the reporting contract
+    and are unchanged.
     """
-    thresh = ops.metric_radius_transform(metric, r)
-    n = x.shape[0]
-
     def chunk_fn(qq):
-        if metric == "hamming":
-            dists = ops.hamming_dist(qq, x, impl=impl).astype(jnp.float32)
-        else:
-            dists = ops.pairwise_dist(qq, x, metric, impl=impl)
-        mask = dists <= thresh
-        ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), dists.shape)
-        return ids, dists, mask
+        return ops.fused_linear_scan(qq, x, r, metric, impl=impl)
 
     nq = q.shape[0]
-    if q_chunk and nq % q_chunk == 0 and nq > q_chunk:
-        q_r = q.reshape(nq // q_chunk, q_chunk, *q.shape[1:])
-        ids, dists, mask = jax.lax.map(chunk_fn, q_r)
-        flat = lambda a: a.reshape(nq, -1)
-        return flat(ids), flat(dists), flat(mask)
+    if q_chunk and nq > q_chunk:
+        return _chunked(chunk_fn, (q,), nq, q_chunk, (0,))
     return chunk_fn(q)
 
 
@@ -110,7 +121,9 @@ def lsh_candidate_counts(tables: LSHTables, qbuckets: jax.Array, cap: int,
     so a traced query batch can compare the HLL candSize *estimate*
     against the candidates actually scanned (cap-truncated, exactly
     like the search; tombstoned rows included — they are gathered and
-    verified, so they are real work).
+    verified, so they are real work).  Per-route *kernel time* for the
+    verification itself is recorded by the tracer's phase histograms,
+    labeled with the backend that served it (``ops.resolve_impl``).
     """
     sentinel = tables.n
     cands = gather_candidates(tables, qbuckets, cap, sentinel, tidx=tidx)
@@ -118,10 +131,12 @@ def lsh_candidate_counts(tables: LSHTables, qbuckets: jax.Array, cap: int,
     return jnp.sum(uniq, axis=-1, dtype=jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk"))
+@functools.partial(jax.jit, static_argnames=("metric", "cap", "q_chunk",
+                                             "impl"))
 def lsh_search(x: jax.Array, tables: LSHTables, qbuckets: jax.Array,
                q: jax.Array, r: float, metric: str, cap: int,
-               q_chunk: int = 32, tidx: jax.Array | None = None):
+               q_chunk: int = 32, tidx: jax.Array | None = None,
+               impl: str | None = None):
     """LSH-based search (steps S2+S3).
 
     x: (n, d) database rows (or (n, W) packed codes for hamming);
@@ -129,28 +144,26 @@ def lsh_search(x: jax.Array, tables: LSHTables, qbuckets: jax.Array,
     L*T under multi-probe with ``tidx`` mapping probe columns to
     physical tables); q: (Q, d) queries.
     Returns (ids (Q, V*cap), dists, mask) — deduped, verified.
-    Processes queries in chunks of ``q_chunk`` to bound the gathered
-    candidate working set (V*cap rows of d floats per query).
+
+    Per chunk the candidate ids are sorted (int32, d-independent) and
+    handed to the fused verification kernel (``ops.fused_lsh_scan``):
+    run-dedup, row gather, rowwise distance, and threshold run in one
+    pass over (Q, V*cap) candidate tiles, so the gathered (qc, C, d)
+    rows stream through VMEM instead of materializing.  Queries are
+    processed in chunks of ``q_chunk`` (padded up to a chunk multiple —
+    pad rows carry all-sentinel candidates, so they self-mask).
     """
     n = x.shape[0]
     sentinel = n
     cands = gather_candidates(tables, qbuckets, cap, sentinel,
                               tidx=tidx)                        # (Q, C)
-    thresh = ops.metric_radius_transform(metric, r)
 
     def chunk_fn(args):
         c, qq = args                                   # (qc, C), (qc, d)
-        ids, uniq = dedupe_sorted(c, sentinel)
-        rows = x[jnp.clip(ids, 0, n - 1)]              # (qc, C, d)
-        dists = rowwise_dist(rows, qq, metric)
-        mask = uniq & (dists <= thresh)
-        return ids, dists, mask
+        ids = jnp.sort(c, axis=-1)
+        return ops.fused_lsh_scan(x, ids, qq, r, metric, impl=impl)
 
     nq = q.shape[0]
-    if nq % q_chunk == 0 and nq > q_chunk:
-        c_r = cands.reshape(nq // q_chunk, q_chunk, -1)
-        q_r = q.reshape(nq // q_chunk, q_chunk, -1)
-        ids, dists, mask = jax.lax.map(chunk_fn, (c_r, q_r))
-        flat = lambda a: a.reshape(nq, -1)
-        return flat(ids), flat(dists), flat(mask)
+    if q_chunk and nq > q_chunk:
+        return _chunked(chunk_fn, (cands, q), nq, q_chunk, (sentinel, 0))
     return chunk_fn((cands, q))

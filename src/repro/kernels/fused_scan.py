@@ -1,0 +1,312 @@
+"""Fused Pallas kernels for the two query routes (the candidate scan).
+
+The composed hot path runs distance, threshold, report-mask (and, on
+the LSH route, row gather + dedup) as separate XLA kernels, writing the
+full ``(Q, N)`` / ``(Q, C, d)`` intermediates to HBM between stages.
+These kernels fuse each route into one ``pallas_call`` that streams
+candidate blocks through VMEM once — the blockwise Q_CHUNK/K_CHUNK
+pattern: fixed-size tiles, online accumulate over the contraction axis,
+no full intermediate materialization.
+
+Linear route (``linear_scan_*_pallas``): grid ``(Q/tq, N/tn[, d/td])``
+with the contraction axis innermost.  The distance tile accumulates in
+the revisited output block (init at ``k == 0``, exactly like
+``distances.py``); on the *last* d-block the epilogue applies the L2
+clamp, compares against the threshold, and writes the report mask and
+the candidate-id tile in place — the separate compare/broadcast-ids
+passes of the composed path never touch HBM.
+
+LSH route (``lsh_scan_pallas``): grid ``(Q/tq, C/tc)`` over the sorted
+candidate-id tiles.  Per tile the kernel masks duplicate runs and
+sentinels (``ids != prev & ids < n`` — the sorted-run half of
+``dedupe_sorted``; the (Q, C) int32 sort itself stays an XLA op, it is
+the d-independent cheap part), gathers each candidate row from the
+resident corpus block by dynamic slice into a VMEM scratch, and runs
+the rowwise distance + threshold on the gathered tile.  The composed
+path's ``(Q, C, d)`` gathered-rows buffer — the dominant HBM traffic of
+the route — is never materialized; only the ``(Q, C)`` distances and
+mask leave the kernel.
+
+Memory spaces: candidate ids ride twice — an SMEM copy feeding the
+scalar dynamic-slice gathers and a VMEM copy for the vectorized dedup
+compare.  The corpus block is resident (constant index map), so a
+segment's rows must fit VMEM (~16 MB/core); the LSM stack bounds
+segment size, and ``ops.py`` falls back to the jnp oracle elsewhere.
+
+Thresholds arrive as (1, 1) SMEM scalars (they are traced values — the
+radius is a runtime argument).  Masks are written as int8 (TPU-tileable)
+and cast to bool by the ``ops`` wrappers; sentinel semantics (internal
+sentinel = n) match ``core.search`` bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Linear-route tiles mirror distances.py (MXU-aligned); the LSH route
+# tiles the candidate axis at one VREG row of lanes per query row.
+DEFAULT_TQ = 256
+DEFAULT_TN = 256
+DEFAULT_TD = 256
+LSH_TQ = 8
+LSH_TC = 128
+
+
+def _popcount_u32(v):
+    """SWAR popcount (same as ref.popcount_u32, VPU-friendly)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & np.uint32(0x55555555))
+    v = (v & np.uint32(0x33333333)) + ((v >> 2) & np.uint32(0x33333333))
+    v = (v + (v >> 4)) & np.uint32(0x0F0F0F0F)
+    return ((v * np.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Linear route: distance + threshold + report mask + candidate ids
+# ---------------------------------------------------------------------------
+def _linear_dot_kernel(t_ref, q_ref, x_ref, qn_ref, xn_ref,
+                       dist_ref, mask_ref, ids_ref, *, mode, nk, tn):
+    """Accumulate norms - 2 q.x (l2) | 1 - q.x (cosine) over d-blocks;
+    epilogue on the last block: clamp, threshold, ids."""
+    k = pl.program_id(2)
+    j = pl.program_id(1)     # read outside @pl.when (interpret-mode rule)
+
+    @pl.when(k == 0)
+    def _init():
+        if mode == "l2":
+            dist_ref[...] = qn_ref[...][:, None] + xn_ref[...][None, :]
+        else:   # cosine: inputs pre-normalized, distance = 1 - dot
+            dist_ref[...] = jnp.ones_like(dist_ref)
+
+    acc = jnp.dot(q_ref[...], x_ref[...].T,
+                  preferred_element_type=jnp.float32)
+    scale = 2.0 if mode == "l2" else 1.0
+    dist_ref[...] = dist_ref[...] - scale * acc
+
+    @pl.when(k == nk - 1)
+    def _report():
+        d = dist_ref[...]
+        if mode == "l2":
+            d = jnp.maximum(d, 0.0)
+            dist_ref[...] = d
+        mask_ref[...] = (d <= t_ref[0, 0]).astype(jnp.int8)
+        ids_ref[...] = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+                        + j * tn)
+
+
+def _linear_l1_kernel(t_ref, q_ref, x_ref, dist_ref, mask_ref, ids_ref,
+                      *, nk, tn):
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        dist_ref[...] = jnp.zeros_like(dist_ref)
+
+    diff = jnp.abs(q_ref[...][:, None, :] - x_ref[...][None, :, :])
+    dist_ref[...] = dist_ref[...] + jnp.sum(diff, axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _report():
+        d = dist_ref[...]
+        mask_ref[...] = (d <= t_ref[0, 0]).astype(jnp.int8)
+        ids_ref[...] = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+                        + j * tn)
+
+
+def _linear_hamming_kernel(t_ref, q_ref, x_ref, dist_ref, mask_ref, ids_ref,
+                           *, tn):
+    """Packed-code XOR + popcount, single shot per (i, j) tile (the code
+    width is not blocked — W words fit a tile)."""
+    x = q_ref[...][:, None, :] ^ x_ref[...][None, :, :]
+    d = jnp.sum(_popcount_u32(x), axis=-1, dtype=jnp.int32)
+    dist_ref[...] = d
+    mask_ref[...] = (d.astype(jnp.float32) <= t_ref[0, 0]).astype(jnp.int8)
+    j = pl.program_id(1)
+    ids_ref[...] = (jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+                    + j * tn)
+
+
+def _linear_out(nq, nn, tq, tn, dist_dtype):
+    specs = [pl.BlockSpec((tq, tn), lambda i, j, k: (i, j))] * 3
+    shapes = [jax.ShapeDtypeStruct((nq, nn), dist_dtype),
+              jax.ShapeDtypeStruct((nq, nn), jnp.int8),
+              jax.ShapeDtypeStruct((nq, nn), jnp.int32)]
+    return specs, shapes
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tq", "tn", "td",
+                                             "interpret"))
+def linear_scan_dot_pallas(thresh: jax.Array, q: jax.Array, x: jax.Array,
+                           qn: jax.Array, xn: jax.Array, *, mode: str = "l2",
+                           tq: int = DEFAULT_TQ, tn: int = DEFAULT_TN,
+                           td: int = DEFAULT_TD, interpret: bool = False):
+    """Fused (Q, d) x (N, d) -> (dists f32, mask i8, ids i32), all (Q, N).
+
+    Shapes pre-padded (ops.py): Q % tq == N % tn == d % td == 0;
+    ``thresh`` is a (1, 1) f32 scalar (r^2 for l2).
+    """
+    nq, d = q.shape
+    nn = x.shape[0]
+    assert nq % tq == 0 and nn % tn == 0 and d % td == 0, (q.shape, x.shape)
+    grid = (nq // tq, nn // tn, d // td)
+    out_specs, out_shape = _linear_out(nq, nn, tq, tn, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_linear_dot_kernel, mode=mode, nk=grid[2], tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tq, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, td), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tq,), lambda i, j, k: (i,)),
+            pl.BlockSpec((tn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(thresh.astype(jnp.float32), q.astype(jnp.float32),
+      x.astype(jnp.float32), qn.astype(jnp.float32), xn.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "td", "interpret"))
+def linear_scan_l1_pallas(thresh: jax.Array, q: jax.Array, x: jax.Array, *,
+                          tq: int = 128, tn: int = 128, td: int = 128,
+                          interpret: bool = False):
+    """Fused L1 scan -> (dists f32, mask i8, ids i32), all (Q, N)."""
+    nq, d = q.shape
+    nn = x.shape[0]
+    assert nq % tq == 0 and nn % tn == 0 and d % td == 0, (q.shape, x.shape)
+    grid = (nq // tq, nn // tn, d // td)
+    out_specs, out_shape = _linear_out(nq, nn, tq, tn, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_linear_l1_kernel, nk=grid[2], tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tq, td), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, td), lambda i, j, k: (j, k)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(thresh.astype(jnp.float32), q.astype(jnp.float32),
+      x.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
+def linear_scan_hamming_pallas(thresh: jax.Array, qc: jax.Array,
+                               xc: jax.Array, *, tq: int = 128,
+                               tn: int = 128, interpret: bool = False):
+    """Fused packed-code Hamming scan -> (dists i32, mask i8, ids i32)."""
+    nq, w = qc.shape
+    nn = xc.shape[0]
+    assert nq % tq == 0 and nn % tn == 0, (qc.shape, xc.shape)
+    grid = (nq // tq, nn // tn, 1)
+    out_specs, out_shape = _linear_out(nq, nn, tq, tn, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_linear_hamming_kernel, tn=tn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((tq, w), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((tn, w), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(thresh.astype(jnp.float32), qc.astype(jnp.uint32),
+      xc.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# LSH route: sorted-run dedup + row gather + rowwise distance + threshold
+# ---------------------------------------------------------------------------
+def _lsh_kernel(t_ref, ids_sm, x_ref, q_ref, ids_ref, prev_ref,
+                dist_ref, mask_ref, scratch, *, metric, n, tq, tc):
+    """One (tq, tc) candidate tile: dedup-mask, gather, verify.
+
+    ``ids_sm`` is the SMEM copy of the sorted candidate tile (scalar
+    reads drive the dynamic-slice row gathers); ``ids_ref``/``prev_ref``
+    are the VMEM copies for the vectorized run-boundary compare.  The
+    rowwise math is kept expression-identical to ``ref.rowwise_dist``.
+    """
+    ids_v = ids_ref[...]
+    uniq = (ids_v != prev_ref[...]) & (ids_v < n)        # sorted-run dedup
+    thresh = t_ref[0, 0]
+    for qi in range(tq):     # static unroll: stores at static row offsets
+
+        def gather(c, carry):
+            idx = jnp.clip(ids_sm[qi, c], 0, n - 1)
+            scratch[pl.ds(c, 1), :] = x_ref[pl.ds(idx, 1), :]
+            return carry
+
+        jax.lax.fori_loop(0, tc, gather, 0)
+        rows = scratch[...]                              # (tc, d) in VMEM
+        if metric == "hamming":
+            qv = q_ref[qi, :].astype(jnp.uint32)
+            dist = jnp.sum(_popcount_u32(rows ^ qv[None, :]),
+                           axis=-1).astype(jnp.float32)
+        else:
+            qv = q_ref[qi, :]
+            if metric == "l2":
+                diff = rows - qv[None, :]
+                dist = jnp.sum(diff * diff, axis=-1)
+            elif metric == "l1":
+                dist = jnp.sum(jnp.abs(rows - qv[None, :]), axis=-1)
+            else:   # cosine (pad columns are zero: norms unaffected)
+                rn = rows / jnp.maximum(
+                    jnp.sqrt(jnp.sum(rows * rows, -1, keepdims=True)), 1e-12)
+                qn = qv / jnp.maximum(jnp.sqrt(jnp.sum(qv * qv)), 1e-12)
+                dist = 1.0 - jnp.sum(rn * qn[None, :], axis=-1)
+        dist_ref[qi, :] = dist
+        mask_ref[qi, :] = (uniq[qi] & (dist <= thresh)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "n", "tq", "tc",
+                                             "interpret"))
+def lsh_scan_pallas(thresh: jax.Array, x: jax.Array, q: jax.Array,
+                    ids: jax.Array, prev: jax.Array, *, metric: str, n: int,
+                    tq: int = LSH_TQ, tc: int = LSH_TC,
+                    interpret: bool = False):
+    """Fused LSH-route verification -> (dists f32, mask i8), both (Q, C).
+
+    x: (n_pad, d_pad) resident corpus block (rows >= n are pad; never
+    gathered — ids are clipped to n - 1); q: (Q, d_pad); ids/prev:
+    (Q, C) sorted candidate ids and their left-shift (prev[0] = -1),
+    sentinel = ``n``.  Q % tq == C % tc == 0 (ops.py pads; sentinel
+    padding makes padded slots self-masking).
+    """
+    nq, c = ids.shape
+    assert nq % tq == 0 and c % tc == 0, (ids.shape, tq, tc)
+    assert q.shape[1] == x.shape[1], (q.shape, x.shape)
+    grid = (nq // tq, c // tc)
+    dtype = jnp.uint32 if metric == "hamming" else jnp.float32
+    return pl.pallas_call(
+        functools.partial(_lsh_kernel, metric=metric, n=n, tq=tq, tc=tc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # thresh
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j),
+                         memory_space=pltpu.SMEM),                 # ids tile
+            pl.BlockSpec(x.shape, lambda i, j: (0, 0)),            # corpus
+            pl.BlockSpec((tq, q.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, c), jnp.float32),
+            jax.ShapeDtypeStruct((nq, c), jnp.int8),
+        ],
+        scratch_shapes=[pltpu.VMEM((tc, x.shape[1]), dtype)],
+        interpret=interpret,
+    )(thresh.astype(jnp.float32), ids.astype(jnp.int32), x.astype(dtype),
+      q.astype(dtype), ids.astype(jnp.int32), prev.astype(jnp.int32))

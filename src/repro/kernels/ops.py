@@ -16,13 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import distances as _dist
+from repro.kernels import fused_scan as _fs
 from repro.kernels import hamming as _ham
 from repro.kernels import hll_merge as _hllm
 from repro.kernels import ref as _ref
 from repro.kernels import simhash as _sim
 
 __all__ = ["pairwise_dist", "hamming_dist", "simhash_fingerprint",
-           "hll_merge_estimate", "pad_to", "metric_radius_transform"]
+           "hll_merge_estimate", "pad_to", "metric_radius_transform",
+           "fused_linear_scan", "fused_lsh_scan", "resolve_impl"]
 
 
 def _on_tpu() -> bool:
@@ -33,6 +35,12 @@ def _resolve(impl: Optional[str]) -> str:
     if impl is not None:
         return impl
     return "pallas" if _on_tpu() else "ref"
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """The backend an ``impl=`` override actually dispatches to (public:
+    the tracer labels per-route kernel timings with this)."""
+    return _resolve(impl)
 
 
 def pad_to(x: jax.Array, mult: int, axis: int, value=0) -> jax.Array:
@@ -137,6 +145,96 @@ def simhash_fingerprint(x: jax.Array, r: jax.Array, L: int, k: int,
     xp = pad_to(x, tn, 0)
     return _sim.simhash_pallas(xp, rp, L=L, words=words, tn=tn,
                                interpret=interpret)[:n]
+
+
+def fused_linear_scan(q: jax.Array, x: jax.Array, r, metric: str,
+                      impl: Optional[str] = None):
+    """Fused linear-route scan: distance + threshold + report mask +
+    candidate ids in ONE kernel pass over (Q, N) tiles.
+
+    q: (Q, d) queries ((Q, W) packed u32 codes for hamming); x: (N, d)
+    corpus ((N, W) for hamming); r: report radius (traced OK).
+    Returns (ids (Q, N) i32, dists (Q, N) f32, mask (Q, N) bool) —
+    identical to the composed ``pairwise_dist`` -> compare ->
+    broadcast-ids pipeline, without materializing the intermediates.
+    """
+    impl = _resolve(impl)
+    thresh = metric_radius_transform(metric, r)
+    if impl == "ref":
+        return _ref.fused_linear_scan(q, x, thresh, metric)
+    interpret = impl == "pallas_interpret"
+    t = jnp.full((1, 1), thresh, jnp.float32)
+    nq, nn = q.shape[0], x.shape[0]
+    sl = lambda a: a[:nq, :nn]
+    if metric == "hamming":
+        tq = tn = 128
+        d_i, m, i = _fs.linear_scan_hamming_pallas(
+            t, pad_to(q, tq, 0), pad_to(x, tn, 0), tq=tq, tn=tn,
+            interpret=interpret)
+        return sl(i), sl(d_i).astype(jnp.float32), sl(m).astype(bool)
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-12)
+    if metric in ("l2", "cosine"):
+        tq, tn, td = _dist.DEFAULT_TQ, _dist.DEFAULT_TN, _dist.DEFAULT_TD
+        tq, tn, td = min(tq, 128 if interpret else tq), \
+            min(tn, 128 if interpret else tn), min(td, 128 if interpret else td)
+        qp = pad_to(pad_to(q, tq, 0), td, 1)
+        xp = pad_to(pad_to(x, tn, 0), td, 1)
+        qn = jnp.sum(qp.astype(jnp.float32) ** 2, axis=-1)
+        xn = jnp.sum(xp.astype(jnp.float32) ** 2, axis=-1)
+        dd, m, i = _fs.linear_scan_dot_pallas(
+            t, qp, xp, qn, xn, mode="l2" if metric == "l2" else "cosine",
+            tq=tq, tn=tn, td=td, interpret=interpret)
+        return sl(i), sl(dd), sl(m).astype(bool)
+    if metric == "l1":
+        tq = tn = td = 128
+        qp = pad_to(pad_to(q, tq, 0), td, 1)
+        xp = pad_to(pad_to(x, tn, 0), td, 1)
+        dd, m, i = _fs.linear_scan_l1_pallas(t, qp, xp, tq=tq, tn=tn, td=td,
+                                             interpret=interpret)
+        return sl(i), sl(dd), sl(m).astype(bool)
+    raise ValueError(metric)
+
+
+def fused_lsh_scan(x: jax.Array, ids_sorted: jax.Array, q: jax.Array, r,
+                   metric: str, impl: Optional[str] = None):
+    """Fused LSH-route candidate verification: sorted-run dedup + row
+    gather + rowwise distance + threshold in ONE kernel pass over the
+    (Q, C) candidate tiles — the composed ``dedupe_sorted`` ->
+    ``x[ids]`` -> ``rowwise_dist`` -> compare chain without the
+    (Q, C, d) gathered-rows materialization.
+
+    x: (n, d) corpus ((n, W) packed u32 for hamming); ids_sorted:
+    (Q, C) *sorted* candidate ids with sentinel = n (the int32 sort is
+    the caller's — it is the cheap d-independent stage); q: (Q, d).
+    Returns (ids (Q, C) i32, dists (Q, C) f32, mask (Q, C) bool) with
+    duplicates, sentinels, and out-of-radius rows masked.
+    """
+    impl = _resolve(impl)
+    thresh = metric_radius_transform(metric, r)
+    n = x.shape[0]
+    prev = jnp.concatenate(
+        [jnp.full(ids_sorted.shape[:-1] + (1,), -1, ids_sorted.dtype),
+         ids_sorted[..., :-1]], axis=-1)
+    if impl == "ref":
+        return _ref.fused_lsh_scan(x, ids_sorted, prev, q, thresh, metric)
+    interpret = impl == "pallas_interpret"
+    t = jnp.full((1, 1), thresh, jnp.float32)
+    nq, c = ids_sorted.shape
+    tq, tc = _fs.LSH_TQ, _fs.LSH_TC
+    sent = jnp.int32(n)
+    ids_p = pad_to(pad_to(ids_sorted.astype(jnp.int32), tq, 0, value=sent),
+                   tc, 1, value=sent)
+    prev_p = pad_to(pad_to(prev.astype(jnp.int32), tq, 0, value=sent),
+                    tc, 1, value=sent)
+    # corpus rows 8-aligned, lanes 128-aligned (zeros: norms unaffected,
+    # XOR-popcount unaffected; gathers are clipped to the real n rows)
+    xp = pad_to(pad_to(x, 8, 0), 128, 1)
+    qp = pad_to(pad_to(q, tq, 0), 128, 1)
+    dd, m = _fs.lsh_scan_pallas(t, xp, qp, ids_p, prev_p, metric=metric,
+                                n=n, tq=tq, tc=tc, interpret=interpret)
+    return ids_sorted, dd[:nq, :c], m[:nq, :c].astype(bool)
 
 
 def hll_merge_estimate(regs: jax.Array,

@@ -51,6 +51,74 @@ def pairwise_cosine(q: jax.Array, x: jax.Array) -> jax.Array:
     return 1.0 - qn @ xn.T
 
 
+def rowwise_dist(rows: jax.Array, q: jax.Array, metric: str) -> jax.Array:
+    """rows: (..., C, d) candidates vs q: (..., d) -> (..., C) distances.
+
+    The candidate-verification math (gather-bound, plain VPU ops; L2
+    returns squared distance, consistent with pairwise_sql2).  This is
+    the expression the fused LSH-route kernel replicates per tile —
+    ``core.search.rowwise_dist`` delegates here.
+    """
+    if metric == "hamming":
+        x = rows.astype(_UINT) ^ q[..., None, :].astype(_UINT)
+        return jnp.sum(popcount_u32(x), axis=-1).astype(jnp.float32)
+    rows = rows.astype(jnp.float32)
+    q = q.astype(jnp.float32)[..., None, :]
+    if metric == "l2":
+        d = rows - q
+        return jnp.sum(d * d, axis=-1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(rows - q), axis=-1)
+    if metric == "cosine":
+        rn = rows / jnp.maximum(
+            jnp.linalg.norm(rows, axis=-1, keepdims=True), 1e-12)
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True),
+                             1e-12)
+        return 1.0 - jnp.sum(rn * qn, axis=-1)
+    raise ValueError(metric)
+
+
+def fused_linear_scan(q: jax.Array, x: jax.Array, thresh,
+                      metric: str):
+    """Oracle for the fused linear-route scan: the composed pipeline
+    (pairwise distance -> threshold -> broadcast ids) as plain jnp.
+    Returns (ids, dists, mask), each (Q, N); ``thresh`` is already
+    radius-transformed (r^2 for l2)."""
+    if metric == "hamming":
+        dists = hamming(q, x).astype(jnp.float32)
+    elif metric == "l2":
+        dists = pairwise_sql2(q, x)
+    elif metric == "l1":
+        dists = pairwise_l1(q, x)
+    elif metric == "cosine":
+        dists = pairwise_cosine(q, x)
+    else:
+        raise ValueError(metric)
+    mask = dists <= thresh
+    ids = jnp.broadcast_to(jnp.arange(x.shape[0], dtype=jnp.int32),
+                           dists.shape)
+    return ids, dists, mask
+
+
+def fused_lsh_scan(x: jax.Array, ids_sorted: jax.Array, prev: jax.Array,
+                   q: jax.Array, thresh, metric: str):
+    """Oracle for the fused LSH-route scan: sorted-run dedup -> row
+    gather -> rowwise distance -> threshold, as plain jnp.
+
+    ids_sorted: (Q, C) sorted candidate ids with sentinel = x.shape[0];
+    prev: ids_sorted shifted right one slot (prev[..., 0] = -1), so
+    ``ids != prev`` marks run starts — identical to
+    ``core.search.dedupe_sorted``'s first-occurrence mask on sorted
+    input.  Returns (ids_sorted, dists, mask), each (Q, C).
+    """
+    n = x.shape[0]
+    uniq = (ids_sorted != prev) & (ids_sorted < n)
+    rows = x[jnp.clip(ids_sorted, 0, n - 1)]             # (Q, C, d)
+    dists = rowwise_dist(rows, q, metric)
+    mask = uniq & (dists <= thresh)
+    return ids_sorted, dists, mask
+
+
 def hamming(qc: jax.Array, xc: jax.Array) -> jax.Array:
     """Hamming distances over packed codes, (Q, W) x (N, W) -> (Q, N) i32."""
     x = qc.astype(_UINT)[:, None, :] ^ xc.astype(_UINT)[None, :, :]

@@ -112,6 +112,47 @@ def terms_from_cost(cost: Dict[str, float], wire_bytes: float,
     )
 
 
+def linear_scan_traffic(nq: int, n: int, d: int,
+                        dtype_bytes: int = 4) -> Dict[str, float]:
+    """Analytic HBM bytes for one linear-route scan, composed vs fused.
+
+    Both variants must read the inputs (q, x) and write the reporting
+    buffers (dists f32, mask i8, ids i32).  The composed pipeline
+    additionally writes the (Q, N) distance matrix and reads it back
+    for the threshold compare — the traffic the fused kernel deletes.
+    """
+    inputs = (nq * d + n * d) * dtype_bytes
+    outputs = nq * n * (4 + 1 + 4)
+    intermediate = nq * n * (4 + 4)         # dist write + compare re-read
+    return {"fused_bytes": float(inputs + outputs),
+            "composed_bytes": float(inputs + outputs + intermediate)}
+
+
+def lsh_scan_traffic(nq: int, c: int, d: int,
+                     dtype_bytes: int = 4) -> Dict[str, float]:
+    """Analytic HBM bytes for one LSH-route verification, composed vs
+    fused, over (Q, C) candidates of d-dim rows.
+
+    Both variants read the candidate ids (sorted + prev) and the corpus
+    rows they reference, and write the (Q, C) dists + mask.  The
+    composed pipeline materializes the gathered (Q, C, d) rows — one
+    write plus one re-read for the rowwise distance — which is the
+    dominant traffic of the route and what the fused kernel deletes.
+    """
+    ids = nq * c * 4 * 2
+    gather_read = nq * c * d * dtype_bytes
+    outputs = nq * c * (4 + 1)
+    intermediate = nq * c * d * dtype_bytes * 2   # rows write + re-read
+    return {"fused_bytes": float(ids + gather_read + outputs),
+            "composed_bytes": float(ids + gather_read + outputs
+                                    + intermediate)}
+
+
+def scan_memory_seconds(n_bytes: float) -> float:
+    """Memory-roofline seconds for ``n_bytes`` of HBM traffic."""
+    return float(n_bytes) / HBM_BW
+
+
 def model_flops(cfg, shape) -> float:
     """Analytic useful FLOPs per step (global).
 

@@ -123,13 +123,25 @@ class QueryTracer:
                 help="|cand_est - cand_actual| / max(cand_actual, 1)",
                 labels={"route": s})
             for s in ("lsh", "linear")}
-        self._m_phase = {
-            p: registry.histogram(
+        # phase histograms are labeled (phase, impl) so the exposition
+        # shows which kernel backend served each route (the fused Pallas
+        # path on TPU, the jnp oracles elsewhere); series are created
+        # lazily per observed backend (get-or-create is cheap)
+        self._registry = registry
+        self._m_phase: Dict[tuple, object] = {}
+        self._last_impl: Optional[str] = None
+
+    def _phase_hist(self, phase: str, impl: str):
+        key = (phase, impl)
+        h = self._m_phase.get(key)
+        if h is None:
+            h = self._registry.histogram(
                 "repro_query_phase_seconds",
-                help="wall seconds per traced query batch, by phase",
-                labels={"phase": p})
-            for p in ("estimate", "search_lsh", "search_linear",
-                      "count_actual")}
+                help="wall seconds per traced query batch, by phase and "
+                     "kernel impl",
+                labels={"phase": phase, "impl": impl})
+            self._m_phase[key] = h
+        return h
 
     # ------------------------------------------------------------ sample
     def sample(self) -> bool:
@@ -150,14 +162,17 @@ class QueryTracer:
                      linear_cost: float, probes: int,
                      forced: Optional[str],
                      phase_seconds: Dict[str, float],
-                     segment_seconds: Optional[Dict[str, list]] = None
+                     segment_seconds: Optional[Dict[str, list]] = None,
+                     kernel_impl: Optional[str] = None
                      ) -> None:
         """Fold one engine batch into spans + aggregates.
 
         All per-query arrays are (Q,) host numpy; ``linear_cost`` is
         the batch's scalar Eq. (2) cost; ``forced`` is the engine's
         strategy override (those queries get spans but do not count
-        toward the misroute rate).
+        toward the misroute rate); ``kernel_impl`` is the resolved
+        kernel backend (``ops.resolve_impl``) that served the search
+        phases — it labels the phase histograms.
         """
         use = np.asarray(use_lsh, bool)
         nq = int(use.shape[0])
@@ -189,10 +204,12 @@ class QueryTracer:
 
         with self._lock:
             self._spans.extend(spans)
+            self._last_impl = kernel_impl
             self._batches.append({
                 "n_queries": nq, "forced": forced,
                 "phase_seconds": dict(phase_seconds),
                 "segment_seconds": segment_seconds,
+                "kernel_impl": kernel_impl,
             })
             if forced is None:
                 self._queries += nq
@@ -214,10 +231,9 @@ class QueryTracer:
                 self._m_misroutes[s].inc(int(mis[sel].sum()))
                 for e in rel_err[sel]:
                     self._m_rel_err[s].observe(float(e))
+        impl_label = kernel_impl or "auto"
         for p, sec in phase_seconds.items():
-            h = self._m_phase.get(p)
-            if h is not None:
-                h.observe(float(sec))
+            self._phase_hist(p, impl_label).observe(float(sec))
 
     # ----------------------------------------------------------- readout
     @property
@@ -259,6 +275,7 @@ class QueryTracer:
                 "forced_queries": self._forced,
                 "frac_lsh": (by_route["lsh"]["queries"]
                              / max(self._queries, 1)),
+                "kernel_impl": self._last_impl,
                 "by_route": by_route,
                 "spans_retained": len(self._spans),
                 "last_batch": dict(last) if last else None,

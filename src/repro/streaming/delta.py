@@ -163,13 +163,15 @@ def search(delta: DeltaSegment, qbuckets: jax.Array, q: jax.Array, r: float,
     ``require_collision=True`` mirrors LSH-route semantics (a delta row
     is a candidate only if it collides in >= 1 probed bucket); ``False``
     mirrors the linear route (every live row is checked).
+
+    The distance + threshold pass is the fused linear-route kernel
+    (``ops.fused_linear_scan``) — the delta is small, but it sits in
+    *every* query's segment list, so its scan rides the same one-pass
+    path as the frozen levels; the live/collision masks compose on top.
     """
-    if metric == "hamming":
-        dists = ops.hamming_dist(q, delta.x, impl=impl).astype(jnp.float32)
-    else:
-        dists = ops.pairwise_dist(q, delta.x, metric, impl=impl)
-    thresh = ops.metric_radius_transform(metric, r)
-    mask = (dists <= thresh) & delta.live[None, :]
+    _, dists, in_radius = ops.fused_linear_scan(q, delta.x, r, metric,
+                                                impl=impl)
+    mask = in_radius & delta.live[None, :]
     if require_collision:
         hit = jnp.any(qbuckets[:, None, :].astype(jnp.int32)
                       == _row_buckets(delta, tidx)[None, :, :], axis=-1)

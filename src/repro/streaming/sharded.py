@@ -985,13 +985,13 @@ class ShardedDynamicHybridIndex:
         max_out = min(self.max_out, sum(n_pads) + C + 1,
                       len(n_pads) * family.L * cap + C + 1)
         routing, axis = self.routing, self.data_axis
-        engine = self._engine
+        engine, impl = self._engine, self.impl
 
         def _query(level_leaves, delta_leaves, params, queries, r):
             delta = delta_lib.DeltaSegment(*(l[0] for l in delta_leaves))
             qb = family.bucket_ids(params, queries, B)
 
-            dview = delta_lib.DeltaView(delta, metric)
+            dview = delta_lib.DeltaView(delta, metric, impl=impl)
             d_est = dview.estimate_terms(qb)
             n_live_local = jnp.sum(delta.live, dtype=jnp.int32)
             n_scan_local = delta.count + sum(n_pads)
@@ -1003,7 +1003,7 @@ class ShardedDynamicHybridIndex:
                     tables=LSHTables(perm, starts, regs), x=mx,
                     metric=metric, cap=cap, live=live,
                     tomb_counts=tcounts, ext_ids=mids,
-                    q_chunk=queries.shape[0])
+                    q_chunk=queries.shape[0], impl=impl)
                 m_est = main.estimate_terms(qb)
                 merged_local = hll_lib.merge_registers(
                     m_est.registers.astype(jnp.int32), axis=1)   # (Q, m)

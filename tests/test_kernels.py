@@ -84,3 +84,108 @@ def test_l2_transform_threshold():
     """ops returns squared L2; radius transform must square r."""
     assert ops.metric_radius_transform("l2", 3.0) == 9.0
     assert ops.metric_radius_transform("cosine", 0.5) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Fused query-path kernels (fused_scan.py) vs the composed oracles.
+#
+# Radii sit away from any realized distance, so the report masks are
+# insensitive to float reassociation and must match EXACTLY (ids too);
+# raw distances are allclose (the kernel and XLA reduce in different
+# orders).  The "ref" impl *is* the composed pipeline, so dispatch-level
+# bit-identity off-TPU holds by construction.
+# ---------------------------------------------------------------------------
+_FUSED_RADII = {"l2": 7.0, "l1": 55.0, "cosine": 0.9, "hamming": 300.0}
+
+
+def _fused_pair(metric, q, n):
+    if metric == "hamming":
+        qa = jnp.asarray(RNG.integers(0, 2**32, (q, 3), dtype=np.uint32))
+        xa = jnp.asarray(RNG.integers(0, 2**32, (n, 3), dtype=np.uint32))
+    else:
+        d = 37
+        qa, xa = _pts(q, d), _pts(n, d)
+    return qa, xa
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1", "cosine", "hamming"])
+@pytest.mark.parametrize("q,n", [(8, 100), (33, 257)])
+def test_fused_linear_scan_matches_ref(metric, q, n):
+    qa, xa = _fused_pair(metric, q, n)
+    r = _FUSED_RADII[metric]
+    ia, da, ma = ops.fused_linear_scan(qa, xa, r, metric,
+                                       impl="pallas_interpret")
+    ib, db, mb = ops.fused_linear_scan(qa, xa, r, metric, impl="ref")
+    assert ia.shape == da.shape == ma.shape == (q, n)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+    np.testing.assert_allclose(np.asarray(da), np.asarray(db),
+                               rtol=3e-4, atol=3e-4)
+    assert int(np.asarray(ma).sum()) > 0      # radii actually report
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1", "cosine", "hamming"])
+def test_fused_lsh_scan_handcrafted_candidates(metric):
+    """Duplicates, sentinel padding, and an all-sentinel (empty-bucket)
+    row all mask identically in the kernel and the oracle."""
+    n = 40
+    qa, xa = _fused_pair(metric, 3, n)
+    sent = n
+    ids = jnp.asarray(np.array([
+        [0, 0, 0, 1, 2, 2, 5, sent],            # duplicate runs
+        [3, 7, 7, 9, sent, sent, sent, sent],   # sentinel tail
+        [sent] * 8,                             # empty bucket row
+    ], np.int32))
+    ids = jnp.sort(ids, axis=-1)
+    r = _FUSED_RADII[metric]
+    ia, da, ma = ops.fused_lsh_scan(xa, ids, qa, r, metric,
+                                    impl="pallas_interpret")
+    ib, db, mb = ops.fused_lsh_scan(xa, ids, qa, r, metric, impl="ref")
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+    ma_np, da_np = np.asarray(ma), np.asarray(da)
+    np.testing.assert_allclose(da_np[ma_np], np.asarray(db)[ma_np],
+                               rtol=3e-4, atol=3e-4)
+    assert not ma_np[2].any()                  # all-sentinel row reports 0
+    # duplicates report at most once: masked ids are unique per query
+    for qi in range(2):
+        rep = np.asarray(ia)[qi][ma_np[qi]]
+        assert len(rep) == len(set(rep.tolist()))
+
+
+@pytest.mark.parametrize("metric", ["l2", "hamming"])
+def test_fused_lsh_search_end_to_end(metric):
+    """lsh_search with real tables + multi-probe tidx + cap truncation:
+    interpret and ref dispatches agree on ids/mask exactly."""
+    from repro.core.lsh.tables import build_tables
+    from repro.core.search import lsh_search
+    n, q, L, B, cap = 150, 33, 4, 8, 2        # tiny cap => truncation
+    qa, xa = _fused_pair(metric, q, n)
+    bids = jnp.asarray(RNG.integers(0, B, size=(n, L), dtype=np.int32))
+    tables = build_tables(jnp.arange(n, dtype=jnp.int32), bids, B, 16)
+    tidx = jnp.asarray(np.repeat(np.arange(L), 2).astype(np.int32))
+    qb = jnp.asarray(RNG.integers(0, B, size=(q, L * 2), dtype=np.int32))
+    r = _FUSED_RADII[metric]
+    a = lsh_search(xa, tables, qb, qa, r, metric, cap, q_chunk=16,
+                   tidx=tidx, impl="pallas_interpret")
+    b = lsh_search(xa, tables, qb, qa, r, metric, cap, q_chunk=16,
+                   tidx=tidx, impl="ref")
+    assert a[0].shape == (q, L * 2 * cap)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[2]), np.asarray(b[2]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("nq", [7, 32, 33, 65])
+def test_search_chunking_pads_odd_batches(nq):
+    """No batch size falls back to full materialization: results are
+    invariant to q_chunk (chunked == unchunked == chunk-padded)."""
+    from repro.core.search import linear_search
+    qa, xa = _fused_pair("l2", nq, 97)
+    base = linear_search(xa, qa, 7.0, "l2", impl="ref", q_chunk=0)
+    for q_chunk in (16, 32):
+        got = linear_search(xa, qa, 7.0, "l2", impl="ref", q_chunk=q_chunk)
+        for ga, ba in zip(got, base):
+            assert ga.shape == ba.shape == (nq, 97)
+            np.testing.assert_array_equal(np.asarray(ga), np.asarray(ba))
