@@ -32,8 +32,10 @@ def main() -> None:
                          "placement comparison (>= 2 host devices forced), "
                          "--emit BENCH_obs.json the observability overhead "
                          "+ misroute-rate bench, --emit BENCH_kernels.json "
-                         "the fused-vs-composed kernel comparison. Skips "
-                         "the paper tables")
+                         "the fused-vs-composed kernel comparison, --emit "
+                         "BENCH_serve.json the closed-loop serving "
+                         "throughput bench (coalescing + result cache vs "
+                         "naive). Skips the paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
@@ -78,6 +80,28 @@ def main() -> None:
         print(f"kernel_fused_min_speedup,{0:.1f},"
               f"{worst:.2f}x composed (impl={out['impl']}, "
               f"tpu={out['on_tpu']})")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "serve" in os.path.basename(args.emit):
+        from benchmarks import serve_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = serve_bench.main(scale, emit=args.emit)
+        for mode in ("naive", "coalesced", "coalesced_cache"):
+            m = rows["modes"][mode]
+            print(f"serve_sustained_qps_{mode},"
+                  f"{1e6 / max(m['sustained_qps'], 1e-9):.1f},"
+                  f"{m['sustained_qps']:.0f} qps sustained "
+                  f"(p99 {1e3 * m['p99_s_at_sustained']:.1f}ms vs SLO "
+                  f"{1e3 * rows['slo_s']:.0f}ms; capacity "
+                  f"{m['capacity_qps']:.0f} qps)")
+        print(f"serve_speedup_vs_naive,{0:.1f},"
+              f"coalesced {rows['speedup_coalesced_vs_naive']:.1f}x, "
+              f"+cache {rows['speedup_cache_vs_naive']:.1f}x at "
+              f"cold hit rate {rows['cache_hit_rate']:.2f} "
+              f"({rows['n_distinct']}/{rows['n_requests']} distinct)")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

@@ -264,6 +264,21 @@ class QueryResult:
                 return np.asarray(ids[row])[np.asarray(mask[row])]
         raise KeyError(i)
 
+    def reported(self, i: int):
+        """(ids, dists) reported for query ``i`` — ``neighbors`` plus
+        the distances, the pair the serving result cache stores."""
+        for idx, out in ((self.lsh_idx, self.lsh_out),
+                         (self.lin_idx, self.lin_out)):
+            if out is None:
+                continue
+            pos = np.nonzero(np.asarray(idx) == i)[0]
+            if len(pos):
+                ids, dists, mask = out
+                row = pos[0]
+                m = np.asarray(mask[row])
+                return np.asarray(ids[row])[m], np.asarray(dists[row])[m]
+        raise KeyError(i)
+
     def neighbor_sets(self):
         return {i: set(self.neighbors(i).tolist())
                 for i in range(self.n_queries)}

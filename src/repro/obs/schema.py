@@ -12,13 +12,27 @@ from __future__ import annotations
 
 __all__ = ["RETRIEVAL_SERVICE_KEYS", "COMPACTION_STATS_KEYS",
            "INDEX_STATS_KEYS", "SHARDED_INDEX_EXTRA_KEYS",
-           "DRIVER_STATS_KEYS", "WORK_PHASE_KEYS", "EVENT_BASE_FIELDS",
+           "DRIVER_STATS_KEYS", "SCHEDULER_STATS_KEYS",
+           "CACHE_STATS_KEYS", "WORK_PHASE_KEYS", "EVENT_BASE_FIELDS",
            "retrieval_stats_keys"]
 
-# RetrievalService's own serving counters (before the index_stats merge)
+# RetrievalService's own serving counters (before the index_stats
+# merge); "scheduler" and "cache" are sub-dicts pinned below
 RETRIEVAL_SERVICE_KEYS = frozenset({
     "queries", "linear_served", "frac_linear",
-    "compaction_ticks", "idle_ticks", "index_size"})
+    "compaction_ticks", "idle_ticks", "index_size",
+    "scheduler", "cache"})
+
+# ShapeBucketScheduler.stats() — the coalescing/admission view
+SCHEDULER_STATS_KEYS = frozenset({
+    "queue_depth", "submits", "rejects", "batches", "requests_batched",
+    "ticks", "queue_wait_sum_s", "queue_wait_max_s",
+    "max_batch", "max_wait_s", "max_queue"})
+
+# ResultCache.stats() — the version-keyed result cache view
+CACHE_STATS_KEYS = frozenset({
+    "hits", "misses", "puts", "evictions", "stale_drops",
+    "entries", "bytes", "max_bytes", "hit_rate"})
 
 # CompactionStats.as_dict() — shared by both streaming indexes
 COMPACTION_STATS_KEYS = frozenset({

@@ -1,7 +1,9 @@
+from repro.serve.cache import ResultCache
 from repro.serve.engine import generate, make_serve_prefill, make_serve_step
-from repro.serve.retrieval import RetrievalConfig, RetrievalService
+from repro.serve.retrieval import (RequestResult, RetrievalConfig,
+                                   RetrievalService)
 from repro.serve.scheduler import ShapeBucketScheduler, route_and_group
 
 __all__ = ["generate", "make_serve_prefill", "make_serve_step",
-           "RetrievalConfig", "RetrievalService", "ShapeBucketScheduler",
-           "route_and_group"]
+           "RequestResult", "ResultCache", "RetrievalConfig",
+           "RetrievalService", "ShapeBucketScheduler", "route_and_group"]

@@ -17,12 +17,20 @@ budgeted ticks (``compact_step_rows`` set; ``compaction_tick`` between
 batches), or fully async (``async_compaction=True``; the service owns
 a ``CompactionDriver`` whose worker thread stages merges while the
 serving thread only drains staged swaps).
+
+The closed-loop fast path (docs/serving.md): ``submit`` enqueues
+requests on the service's coalescing ``ShapeBucketScheduler``;
+``drain_batches`` forms pow2 shape buckets across requests, serves
+repeats straight from the version-keyed ``ResultCache``, embeds the
+misses ONCE per formed bucket, runs the paper's cost estimate over the
+whole coalesced batch, splits by route, and scatters per-request
+``RequestResult``s back by uid.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Iterable, Optional, Sequence, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,10 +39,13 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core import CostModel
+from repro.core.engine import _pad_size
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
 from repro.obs import Observability, to_prometheus
+from repro.serve.cache import ResultCache
+from repro.serve.scheduler import ShapeBucketScheduler
 from repro.streaming import (CompactionDriver, CompactionPolicy,
                              DynamicHybridIndex,
                              ShardedDynamicHybridIndex)
@@ -76,6 +87,17 @@ class RetrievalConfig:
     # reports `shard_skew` (max/mean live load) and cumulative
     # `rows_moved` so skewed streams are visible and correctable.
     shard_placement: str = "keep_local"
+    # Closed-loop serving (docs/serving.md): the submit/drain_batches
+    # path coalesces cross-request queries into pow2 shape buckets.
+    # max_wait_s is the coalescing deadline (0 drains greedily);
+    # max_queue bounds admission (None = unbounded; beyond it submit
+    # returns None and counts a reject); result_cache_bytes budgets the
+    # version-keyed query result cache (0 disables it).
+    coalesce_max_batch: int = 64
+    coalesce_min_bucket: int = 8
+    coalesce_max_wait_s: float = 0.0
+    max_queue: Optional[int] = 4096
+    result_cache_bytes: int = 8 << 20
     # Observability (repro.obs; docs/observability.md): one bundle —
     # metrics registry + per-query route tracer + compaction event log —
     # shared by the service, the index, and the driver.  obs_enabled
@@ -88,6 +110,29 @@ class RetrievalConfig:
     obs_trace_sample_every: int = 16    # trace every Nth batch (1 = all)
     obs_per_segment_timing: bool = False
     obs_dump_path: Optional[str] = None  # shutdown() metrics dump target
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's scattered share of a coalesced batch.
+
+    ``ids[i]`` / ``dists[i]`` are the reported r-near neighbors of the
+    request's i-th query row (external doc ids; arrays are read-only
+    when served from the cache).  ``cached`` marks a cache hit;
+    ``queue_wait_s`` is the scheduler queue time (0 for hits served at
+    submit-batch formation).
+    """
+
+    uid: int
+    ids: List[np.ndarray]
+    dists: List[np.ndarray]
+    n_queries: int
+    cached: bool
+    queue_wait_s: float
+
+    def neighbor_sets(self):
+        return {i: set(self.ids[i].tolist())
+                for i in range(self.n_queries)}
 
 
 class RetrievalService:
@@ -111,7 +156,12 @@ class RetrievalService:
     """
 
     def __init__(self, cfg: ArchConfig, par: ParallelConfig, params,
-                 rcfg: RetrievalConfig = RetrievalConfig()):
+                 rcfg: Optional[RetrievalConfig] = None):
+        # default must be constructed per instance: a dataclass default
+        # in the signature is ONE shared object, and anything mutating
+        # it (tests tweaking radius, a caller setting mesh) would leak
+        # into every service built afterwards
+        rcfg = rcfg if rcfg is not None else RetrievalConfig()
         self.cfg, self.par, self.params, self.rcfg = cfg, par, params, rcfg
         self._embed = jax.jit(
             lambda p, b: forward_embed(p, b, cfg, par))
@@ -142,6 +192,19 @@ class RetrievalService:
             help="Maintenance ticks with nothing to do")
         self._g_size = reg.gauge(
             "repro_index_live_docs", help="Live documents in the index")
+        # The closed-loop fast path: one coalescing scheduler + one
+        # version-keyed result cache per service, built unconditionally
+        # so the stats schema never varies with traffic shape.  The
+        # scheduler's background tick is the compaction hook — every
+        # drain advances merge work between batches.
+        self.scheduler = ShapeBucketScheduler(
+            max_batch=rcfg.coalesce_max_batch,
+            min_bucket=rcfg.coalesce_min_bucket,
+            background_tick=self.compaction_tick,
+            registry=reg,
+            max_wait_s=rcfg.coalesce_max_wait_s,
+            max_queue=rcfg.max_queue)
+        self.cache = ResultCache(rcfg.result_cache_bytes, registry=reg)
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Normalized (B, d_model) embeddings for one token batch."""
@@ -238,6 +301,115 @@ class RetrievalService:
         self._m_queries.inc(res.n_queries)
         self._m_linear.inc(res.n_linear)
         return res, q
+
+    # ------------------------------------------- coalesced serving path
+    def submit(self, batch, radius: Optional[float] = None
+               ) -> Optional[int]:
+        """Enqueue one retrieval request for coalesced dispatch.
+
+        ``batch`` is a token batch dict (or a bare token array); a 1-D
+        row is treated as a single query.  Returns the request uid, or
+        None when admission control sheds it (scheduler queue full —
+        counted in ``repro_scheduler_rejects_total``).  Results come
+        back from ``drain_batches`` keyed by this uid.
+        """
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None, :]
+        r = float(radius if radius is not None else self.rcfg.radius)
+        return self.scheduler.submit({"tokens": tokens, "radius": r})
+
+    def drain_batches(self, max_batches: Optional[int] = None,
+                      force: bool = False) -> Dict[int, "RequestResult"]:
+        """Form and serve coalesced batches until the scheduler yields
+        nothing (deadline not reached, or queue empty).
+
+        ``force=True`` flushes requests still inside the coalescing
+        deadline (shutdown, test barriers); ``max_batches`` bounds the
+        work per call so a serving loop can interleave drains with
+        other duties.  Returns uid -> ``RequestResult`` for every
+        request served this call.
+        """
+        assert self.index is not None, "call index_corpus first"
+        out: Dict[int, RequestResult] = {}
+        served = 0
+        while max_batches is None or served < max_batches:
+            reqs, _bucket = self.scheduler.next_batch(force=force)
+            if not reqs:
+                break
+            out.update(self._serve_batch(reqs))
+            served += 1
+        return out
+
+    def _serve_batch(self, reqs) -> Dict[int, "RequestResult"]:
+        """Serve one formed batch: cache lookups first, then one embed +
+        one routed index query per (radius, seq) miss group, scattered
+        back per request by uid."""
+        version = self.index.version
+        self.cache.purge_stale(version)
+        out: Dict[int, RequestResult] = {}
+        # (radius, seq_len) -> [(req, key)]; rows of one group share one
+        # compiled embed + query shape, so they coalesce into one dense
+        # pow2 dispatch through the PR 7 fused kernels
+        groups: Dict[tuple, list] = {}
+        for req in reqs:
+            tokens = req.payload["tokens"]
+            radius = req.payload["radius"]
+            key = self.cache.key(version, radius, tokens)
+            hit = self.cache.get(key)
+            if hit is not None:
+                ids, dists = hit
+                out[req.uid] = RequestResult(
+                    uid=req.uid, ids=list(ids), dists=list(dists),
+                    n_queries=len(ids), cached=True,
+                    queue_wait_s=req.wait_s)
+                continue
+            groups.setdefault((radius, tokens.shape[1]), []).append(
+                (req, key))
+        for (radius, _seq), members in groups.items():
+            self._serve_miss_group(radius, members, out)
+        return out
+
+    def _serve_miss_group(self, radius: float, members, out) -> None:
+        rows = np.concatenate([req.payload["tokens"]
+                               for req, _ in members], axis=0)
+        nq = rows.shape[0]
+        n_pad = _pad_size(nq, minimum=self.rcfg.coalesce_min_bucket)
+        if n_pad > nq:      # repeat the last row; pad results dropped
+            rows = np.concatenate(
+                [rows, np.repeat(rows[-1:], n_pad - nq, axis=0)], axis=0)
+        emb = self.embed({"tokens": jnp.asarray(rows)})
+        res = self.index.query(emb, radius)
+        self._queries_served += nq
+        n_linear = self._count_linear(res, nq)
+        self._linear_served += n_linear
+        self._m_queries.inc(nq)
+        self._m_linear.inc(n_linear)
+        off = 0
+        for req, key in members:
+            k = req.payload["tokens"].shape[0]
+            pairs = [res.reported(off + j) for j in range(k)]
+            ids = [np.asarray(p[0]) for p in pairs]
+            dists = [np.asarray(p[1]) for p in pairs]
+            self.cache.put(key, ids, dists)
+            out[req.uid] = RequestResult(
+                uid=req.uid, ids=ids, dists=dists, n_queries=k,
+                cached=False, queue_wait_s=req.wait_s)
+            off += k
+
+    @staticmethod
+    def _count_linear(res, nq: int) -> int:
+        """Linear-route count over the REAL rows of a padded batch.
+
+        Single-host results carry the route partition (pad rows land at
+        indices >= nq and are excluded exactly); the sharded per-batch
+        vote only supports the fractional reconstruction.
+        """
+        if hasattr(res, "lin_idx"):
+            return len({int(i) for i in np.asarray(res.lin_idx).tolist()
+                        if i < nq})
+        return round(nq * res.frac_linear)
 
     def compaction_tick(self) -> bool:
         """The between-batches maintenance hook (wire it as
@@ -356,6 +528,11 @@ class RetrievalService:
         (max/mean live load; 1.0 = balanced), the active ``placement``
         policy, and cumulative ``rows_moved`` across shards.
 
+        The coalesced serving path adds two pinned sub-dicts:
+        ``scheduler`` (queue depth, submits/rejects/batches, queue-wait
+        aggregates — SCHEDULER_STATS_KEYS) and ``cache`` (hit/miss/
+        evict/stale counters + byte budget — CACHE_STATS_KEYS).
+
         ``compaction_ticks`` counts only ticks that ran work;
         ``idle_ticks`` the no-ops.  In async mode a ``driver`` sub-dict
         carries the ``CompactionDriver`` state (``worker_alive``,
@@ -368,7 +545,9 @@ class RetrievalService:
                "frac_linear": self._linear_served / served,
                "compaction_ticks": self._compaction_ticks,
                "idle_ticks": self._idle_ticks,
-               "index_size": self.index.n if self.index else 0}
+               "index_size": self.index.n if self.index else 0,
+               "scheduler": self.scheduler.stats(),
+               "cache": self.cache.stats()}
         if self.index is not None:
             out.update(self.index.index_stats())
         if self.driver is not None:

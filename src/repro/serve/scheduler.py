@@ -7,11 +7,23 @@ paper's cost estimator FIRST so that a micro-batch executes a single
 strategy (per-query lax.cond would run both branches densely on TPU;
 see DESIGN.md §2).
 
+Cross-request coalescing (docs/serving.md): with ``max_wait_s > 0``
+``next_batch`` holds small queues back until either the queue can fill
+a whole ``max_batch`` or the *oldest* request has waited out the
+deadline, so many single-query submits merge into one dense pow2
+bucket instead of draining as singleton batches.  ``max_wait_s = 0``
+(default) drains greedily — exactly the pre-coalescing behavior.
+Admission control: with ``max_queue`` set, submits beyond the bound
+are rejected (``submit`` returns None, counted in
+``repro_scheduler_rejects_total``) instead of growing the queue — and
+the latency SLO — without bound.
+
 The scheduler is also the natural interleaving point for *off-query-
 path* index maintenance: register a ``background_tick`` (typically
-``RetrievalService.compaction_tick``) and it runs once per formed
-batch, between query batches.  What a tick costs depends on the
-service's compaction mode (docs/compaction.md):
+``RetrievalService.compaction_tick``) and it runs once per
+``next_batch`` call — empty and not-yet-ready drains included, so a
+quiet serving loop still advances merges.  What a tick costs depends
+on the service's compaction mode (docs/compaction.md):
 
   * budgeted — the tick runs one bounded LSM merge step (a gather of
     ``compact_step_rows`` rows) on this thread, between batches
@@ -24,47 +36,85 @@ service's compaction mode (docs/compaction.md):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.engine import partition_indices
-from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.metrics import DEFAULT_TIME_BUCKETS, NULL_REGISTRY
 
 
 @dataclasses.dataclass
 class Request:
     uid: int
     payload: Any
+    t_submit: float = 0.0       # scheduler clock at submit
+    wait_s: float = 0.0         # queue wait, stamped when the batch forms
 
 
 class ShapeBucketScheduler:
     def __init__(self, max_batch: int = 64, min_bucket: int = 8,
                  background_tick: Optional[Callable[[], Any]] = None,
-                 registry=None):
+                 registry=None, max_wait_s: float = 0.0,
+                 max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         """``registry`` — optional ``repro.obs.MetricsRegistry``; the
-        default null registry makes every instrument a no-op."""
+        default null registry makes every instrument a no-op.
+
+        ``max_wait_s`` — coalescing deadline: ``next_batch`` returns an
+        empty batch (without counting a phantom batch) until the queue
+        holds ``max_batch`` requests or the oldest has waited this
+        long.  0 (default) drains greedily.
+        ``max_queue`` — admission bound: ``submit`` beyond it returns
+        None and counts a reject.  None (default) = unbounded.
+        ``clock`` — monotonic time source (injectable for tests).
+        """
         self.max_batch = max_batch
         self.min_bucket = min_bucket
         self.background_tick = background_tick
+        self.max_wait_s = float(max_wait_s)
+        self.max_queue = max_queue
+        self.clock = clock
         self.queue: List[Request] = []
         self._uid = 0
         self._ticks = 0
+        self._submits = 0
+        self._rejects = 0
+        self._batches = 0
+        self._requests_batched = 0
+        self._wait_sum = 0.0
+        self._wait_max = 0.0
         reg = registry if registry is not None else NULL_REGISTRY
         self._m_submits = reg.counter(
             "repro_scheduler_submits_total", help="Requests submitted")
+        self._m_rejects = reg.counter(
+            "repro_scheduler_rejects_total",
+            help="Requests rejected by admission control (queue full)")
         self._m_batches = reg.counter(
             "repro_scheduler_batches_total", help="Batches formed")
         self._m_batch_size = reg.histogram(
             "repro_scheduler_batch_size",
             buckets=(1, 2, 4, 8, 16, 32, 64, 128),
             help="Requests per formed batch (pre-padding)")
+        self._m_queue_wait = reg.histogram(
+            "repro_scheduler_queue_wait_seconds",
+            buckets=DEFAULT_TIME_BUCKETS,
+            help="Per-request queue wait (submit -> batch formed)")
         self._m_ticks = reg.counter(
             "repro_scheduler_ticks_total", help="Background ticks run")
 
-    def submit(self, payload) -> int:
+    def submit(self, payload) -> Optional[int]:
+        """Enqueue a request; returns its uid, or None when admission
+        control sheds it (queue already holds ``max_queue`` requests)."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self._rejects += 1
+            self._m_rejects.inc()
+            return None
         self._uid += 1
-        self.queue.append(Request(self._uid, payload))
+        self.queue.append(Request(self._uid, payload,
+                                  t_submit=self.clock()))
+        self._submits += 1
         self._m_submits.inc()
         return self._uid
 
@@ -74,21 +124,44 @@ class ShapeBucketScheduler:
         return min(self.max_batch,
                    max(self.min_bucket, 1 << (k - 1).bit_length()))
 
-    def next_batch(self) -> Tuple[List[Request], int]:
+    def _ready(self, now: float) -> bool:
+        if not self.queue:
+            return False
+        if len(self.queue) >= self.max_batch or self.max_wait_s <= 0.0:
+            return True
+        return (now - self.queue[0].t_submit) >= self.max_wait_s
+
+    def next_batch(self, force: bool = False) -> Tuple[List[Request], int]:
         """Pop up to max_batch requests; returns (requests, padded_size).
 
         Padded size is the pow2 bucket: the runner repeats the last
-        payload to fill and drops the padded results.  A registered
-        ``background_tick`` runs here — after the batch is formed,
-        before the runner executes it — so maintenance work (a bounded
-        LSM ``compact_step``, or in async-compaction mode the driver's
-        cheap ``drain()``) interleaves between query batches instead of
-        stalling one.
+        payload to fill and drops the padded results.  Under a
+        coalescing deadline (``max_wait_s > 0``) a short queue whose
+        oldest request is still inside the deadline returns ``([], 0)``
+        — pass ``force=True`` to flush it anyway (shutdown, test
+        barriers).  Empty and not-ready drains count NO batch and
+        record nothing in the batch-size histogram (a phantom
+        zero-size batch would drag the occupancy stats); the
+        registered ``background_tick`` still runs every call, so
+        maintenance work (a bounded LSM ``compact_step``, or in
+        async-compaction mode the driver's cheap ``drain()``)
+        interleaves between query batches even when traffic pauses.
         """
-        take = self.queue[:self.max_batch]
-        self.queue = self.queue[len(take):]
-        self._m_batches.inc()
-        self._m_batch_size.observe(len(take))
+        now = self.clock()
+        if force and self.queue or self._ready(now):
+            take = self.queue[:self.max_batch]
+            self.queue = self.queue[len(take):]
+            self._batches += 1
+            self._m_batches.inc()
+            self._m_batch_size.observe(len(take))
+            for req in take:
+                req.wait_s = max(now - req.t_submit, 0.0)
+                self._m_queue_wait.observe(req.wait_s)
+                self._wait_sum += req.wait_s
+                self._wait_max = max(self._wait_max, req.wait_s)
+            self._requests_batched += len(take)
+        else:
+            take = []
         if self.background_tick is not None:
             self._ticks += 1
             self._m_ticks.inc()
@@ -98,6 +171,22 @@ class ShapeBucketScheduler:
     @property
     def ticks(self) -> int:
         return self._ticks
+
+    def stats(self) -> Dict[str, float]:
+        """Host-side counters snapshot (schema: SCHEDULER_STATS_KEYS)."""
+        return {
+            "queue_depth": len(self.queue),
+            "submits": self._submits,
+            "rejects": self._rejects,
+            "batches": self._batches,
+            "requests_batched": self._requests_batched,
+            "ticks": self._ticks,
+            "queue_wait_sum_s": self._wait_sum,
+            "queue_wait_max_s": self._wait_max,
+            "max_batch": self.max_batch,
+            "max_wait_s": self.max_wait_s,
+            "max_queue": self.max_queue,
+        }
 
 
 def route_and_group(estimates_use_lsh: np.ndarray, min_bucket: int = 8):

@@ -114,6 +114,11 @@ class DynamicHybridIndex:
         self.stack = SegmentStack(phases=self.phases)
         self.delta: Optional[delta_lib.DeltaSegment] = None
         self.stats = CompactionStats()
+        # Result-cache invalidation: ``version`` must change whenever a
+        # query could report differently.  Stack structure changes bump
+        # ``stack.version``; delta inserts, deletes (tombstones + delta
+        # kills), and wholesale stack replacements bump the base here.
+        self._version_base = 0
         # Host bookkeeping: ext id -> ("m", uid, row) | ("d", slot).
         self._loc: Dict[int, tuple] = {}
         self._next_id = 0
@@ -130,6 +135,23 @@ class DynamicHybridIndex:
     @property
     def n_dead(self) -> int:
         return self.stack.n_dead
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation version — the result-cache key component.
+
+        Changes on every insert, delete, freeze, merge swap, and full
+        rebuild; equal versions guarantee identical reported sets for
+        the same (query, radius).  Monotone across stack replacements:
+        ``_fold_version`` banks the outgoing stack's count first.
+        """
+        return self._version_base + self.stack.version
+
+    def _fold_version(self) -> None:
+        """Bank the current stack's version before replacing it, so the
+        combined version can never run backwards when a fresh stack
+        (version 0) is installed by build/compact/load_state_dict."""
+        self._version_base += self.stack.version + 1
 
     # ------------------------------------------------- compat properties
     @property
@@ -160,6 +182,7 @@ class DynamicHybridIndex:
         else:
             ids = np.asarray(ids, np.int64)
             assert len(set(ids.tolist())) == len(ids), "duplicate ids"
+        self._fold_version()
         self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         if x.shape[0] > 0:
@@ -245,6 +268,7 @@ class DynamicHybridIndex:
             self._loc[int(e)] = ("d", base + i)
         self._n_delta_live += k
         self._inserts += k
+        self._version_base += 1
 
     # ------------------------------------------------------------ delete
     def delete(self, ids: Iterable[int], strict: bool = False) -> int:
@@ -280,6 +304,8 @@ class DynamicHybridIndex:
             self._n_delta_live -= k
             removed += k
         self._deletes += removed
+        if removed:
+            self._version_base += 1
         self._maybe_compact()
         return removed
 
@@ -477,6 +503,7 @@ class DynamicHybridIndex:
         d = self.delta.x.shape[1] if self.delta is not None else (
             x.shape[1] if x.ndim > 1 else 1)
         dtype = self.delta.x.dtype if self.delta is not None else x.dtype
+        self._fold_version()
         self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         if len(ext):
@@ -632,6 +659,7 @@ class DynamicHybridIndex:
         """Restore stack + delta state saved by ``state_dict``."""
         self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
         self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
+        self._fold_version()
         self.stack = SegmentStack(phases=self.phases)
         self._loc = {}
         segs = dict(state.get("segments") or {})

@@ -247,6 +247,13 @@ class SegmentStack:
         self.segments: List[FrozenSegment] = []
         self.tasks: List[MergeTask] = []     # FIFO; tasks[0] is active
         self._next_uid = 0
+        # Monotonic structure version: bumped on every segment-list
+        # change (freeze/add, merge swap).  The index above folds it
+        # into its own ``version`` — the result-cache invalidation key —
+        # so a cached query result can never outlive the segment list it
+        # was computed against.  Tombstone writes bump the *index*
+        # version (deletes go through the index, not the stack).
+        self.version = 0
         # Shared work-phase accumulator (the index passes its own so the
         # numbers survive stack resets).  Every timed interval below is
         # measured ONCE and added to both ``task.work_seconds`` (the
@@ -267,6 +274,7 @@ class SegmentStack:
     def add(self, seg: FrozenSegment) -> None:
         """Append a frozen segment to the level list."""
         self.segments.append(seg)
+        self.version += 1
 
     def by_uid(self, uid: int) -> FrozenSegment:
         """The segment with this uid; KeyError once it merged away."""
@@ -474,6 +482,7 @@ class SegmentStack:
         self.tasks.pop(0)
         removed = [u for u in task.uids]
         self.segments = [s for s in self.segments if s.uid not in removed]
+        self.version += 1
         if not keep_x:
             return MergeResult(new=None, removed_uids=removed, moved=[],
                                dropped=total_in, steps=task.steps,
@@ -515,6 +524,7 @@ class SegmentStack:
         self.tasks.pop(0)
         removed = [u for u in task.uids]
         self.segments = [s for s in self.segments if s.uid not in removed]
+        self.version += 1
         new.uid = self.next_uid()
         mark_rows_dead(new, dead_pos)
         self.add(new)

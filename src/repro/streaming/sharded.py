@@ -98,6 +98,11 @@ class ShardedQueryResult:
     def neighbors(self, i: int) -> np.ndarray:
         return self.ids[:, i][self.mask[:, i]]
 
+    def reported(self, i: int):
+        """(ids, dists) reported for query ``i``, flattened over shards."""
+        m = self.mask[:, i]
+        return self.ids[:, i][m], self.dists[:, i][m]
+
     def neighbor_sets(self):
         return {i: set(self.neighbors(i).tolist())
                 for i in range(self.n_queries)}
@@ -225,6 +230,11 @@ class ShardedDynamicHybridIndex:
         self.obs = obs if obs is not None else Observability.disabled()
         self.phases = WorkPhases("stage", "build", "apply", "full")
 
+        # Result-cache invalidation: monotonic mutation version, bumped
+        # on every insert, delete, freeze, merge swap (rebalancing
+        # included), full compaction, and restore.
+        self._version = 0
+
         # device state; delta None until first use
         self._levels: List[_ShardLevel] = []
         self._delta = None    # dict: x, bucket_ids, ids, live, count
@@ -258,6 +268,16 @@ class ShardedDynamicHybridIndex:
     def n_dead(self) -> int:
         return sum(l.n_rows - l.n_live for l in self._levels)
 
+    @property
+    def version(self) -> int:
+        """Monotonic mutation version — the result-cache key component.
+
+        Changes whenever a query could report differently: insert,
+        delete, freeze, merge swap (placement moves included), full
+        compaction, restore.
+        """
+        return self._version
+
     def _next_uid_(self) -> int:
         u = self._next_uid
         self._next_uid += 1
@@ -285,6 +305,7 @@ class ShardedDynamicHybridIndex:
         self._levels = []
         self._tasks = []
         self._loc = {}
+        self._version += 1
         if n:
             parts = [(x[s::S], ids[s::S]) for s in range(S)]
             self._make_level(parts, self.policy.level_for(
@@ -332,6 +353,7 @@ class ShardedDynamicHybridIndex:
             rows_s=np.asarray(ks, np.int64),
             live_s=np.asarray(ks, np.int64))
         self._levels.append(lvl)
+        self._version += 1
         for s, p in enumerate(parts):
             for i, e in enumerate(np.asarray(p[1]).tolist()):
                 self._loc[int(e)] = (s, "m", lvl.uid, i)
@@ -509,6 +531,7 @@ class ShardedDynamicHybridIndex:
             self.params, rows_p, ids_p, valid)
         self._delta = dict(zip(("x", "bucket_ids", "ids", "live", "count"),
                                out))
+        self._version += 1
 
     def _insert_fn(self, pk: int):
         key = ("insert", pk)
@@ -586,6 +609,8 @@ class ShardedDynamicHybridIndex:
                  self._delta["count"]), slots_p, valid)
             self._delta = {**self._delta, "live": dlive}
         self._deletes += removed
+        if removed:
+            self._version += 1
         self._maybe_compact()
         return removed
 
@@ -864,6 +889,7 @@ class ShardedDynamicHybridIndex:
         total_in = sum(self._level_by_uid(u).n_rows for u in task.uids)
         self._tasks.pop(0)
         self._levels = [l for l in self._levels if l.uid not in task.uids]
+        self._version += 1
         if not surv:
             self._evict_stale_query_fns()
             return 0, total_in, 0
@@ -932,6 +958,7 @@ class ShardedDynamicHybridIndex:
             parts.append((x, np.concatenate(es), np.concatenate(bs, axis=0)))
             total += x.shape[0]
         self._levels = []
+        self._version += 1
         self._reset_delta()
         if total:
             self._make_level(parts, self.policy.level_for(
@@ -1216,6 +1243,7 @@ class ShardedDynamicHybridIndex:
         # a restore may change it, so the cache cannot survive
         self._fn_cache = {}
         self._tasks = []
+        self._version += 1
         self._next_id = int(np.asarray(state["meta"]["next_id"]))
         self._next_uid = int(np.asarray(state["meta"].get("next_uid", 0)))
         pl = state["meta"].get("placement")

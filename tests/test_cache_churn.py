@@ -1,0 +1,247 @@
+"""Result-cache correctness under churn.
+
+The cache key embeds the index's monotonic ``version``, so staleness
+is impossible by construction — these tests prove the construction:
+
+  * every mutation path (insert, delete, freeze, merge swap, sharded
+    rebalance, full compact, restore-style stack replacement) bumps the
+    version;
+  * with mutations interleaved between repeated queries (sync,
+    budgeted, and async compaction modes), the cached service's
+    reported (ids, dists) stay bit-identical to an uncached service at
+    every drained state.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import CostModel
+from repro.core.lsh import make_family
+from repro.data import lm_batch
+from repro.models import init_params
+from repro.models.parallel import ParallelConfig
+from repro.serve import RetrievalConfig, RetrievalService
+from repro.streaming import (CompactionPolicy, DynamicHybridIndex,
+                             ShardedDynamicHybridIndex)
+
+PAR = ParallelConfig(mesh=None, attn_chunk_q=8, attn_chunk_k=8,
+                     logits_chunk=8, remat="none")
+
+
+# --------------------------------------------------------------------------
+# version bumps on every mutation path (index level, no LM)
+# --------------------------------------------------------------------------
+def test_version_bumps_single_host():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(96, 8)).astype(np.float32)
+    idx = DynamicHybridIndex(
+        make_family("l2", d=8, L=4, r=1.0), num_buckets=64, m=32, cap=32,
+        delta_capacity=16,
+        cost_model=CostModel(alpha=1.0, beta=1.0),
+        policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                fanout=2, step_rows=8), key=0)
+
+    def bumped(op):
+        before = idx.version
+        op()
+        assert idx.version > before, op
+        return idx.version
+
+    bumped(lambda: idx.build(x[:32]))                       # build
+    bumped(lambda: idx.insert(x[32:36]))                    # delta insert
+    bumped(lambda: idx.delete([0, 1]))                      # tombstone
+    bumped(lambda: idx.delete([33]))                        # delta kill
+    v = idx.version
+    assert idx.delete([10 ** 9]) == 0 and idx.version == v  # no-op: none
+    # two delta fills -> level-0 freezes (bump each), then drive the
+    # scheduled fanout=2 merge to its swap
+    bumped(lambda: idx.insert(x[36:68]))                    # freeze path
+    assert idx.has_compaction_work
+    before = idx.version
+    while idx.compact_step(budget_rows=8):
+        pass
+    assert idx.version > before                             # merge swap
+    bumped(idx.compact)                                     # full fold
+    # stack replacement can never run the version backwards
+    state = idx.state_dict()
+    bumped(lambda: idx.load_state_dict(state))
+
+
+def test_version_bumps_sharded():
+    mesh = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(96, 8)).astype(np.float32)
+    idx = ShardedDynamicHybridIndex(
+        make_family("l2", d=8, L=4, r=1.0), num_buckets=64, mesh=mesh,
+        m=32, cap=32, delta_capacity=16,
+        cost_model=CostModel(alpha=1.0, beta=1.0),
+        policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                fanout=2, step_rows=8),
+        placement="load_balance", key=0)
+
+    def bumped(op):
+        before = idx.version
+        op()
+        assert idx.version > before, op
+
+    bumped(lambda: idx.build(x[:32]))                       # build
+    bumped(lambda: idx.insert(x[32:36]))                    # delta insert
+    bumped(lambda: idx.delete([0, 1]))                      # tombstone
+    v = idx.version
+    assert idx.delete([10 ** 9]) == 0 and idx.version == v  # no-op: none
+    bumped(lambda: idx.insert(x[36:68]))                    # freeze path
+    assert idx.has_compaction_work
+    before = idx.version
+    while idx.compact_step(budget_rows=8):
+        pass
+    # merge swap through the placement policy (the rebalance path)
+    assert idx.version > before
+    bumped(idx.compact)                                     # full fold
+
+
+# --------------------------------------------------------------------------
+# cached vs uncached bit-identity under interleaved churn
+# --------------------------------------------------------------------------
+def _corpus_batches(cfg, n_batches, start=0):
+    out = []
+    for i in range(start, start + n_batches):
+        b = lm_batch(3, i, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        out.append(b)
+    return out
+
+
+def _service(cfg, params, **kw):
+    base = dict(radius=0.5, tables=8, num_buckets=256, hll_m=32, cap=64,
+                delta_capacity=64)
+    base.update(kw)
+    return RetrievalService(cfg, PAR, params, RetrievalConfig(**base))
+
+
+def _drain_all(svc):
+    out = svc.drain_batches(force=True)
+    assert svc.stats["scheduler"]["queue_depth"] == 0
+    return out
+
+
+def _assert_identical(res_a, res_b, uids_a, uids_b):
+    for ua, ub in zip(uids_a, uids_b):
+        ra, rb = res_a[ua], res_b[ub]
+        assert ra.n_queries == rb.n_queries
+        for j in range(ra.n_queries):
+            np.testing.assert_array_equal(ra.ids[j], rb.ids[j])
+            np.testing.assert_array_equal(ra.dists[j], rb.dists[j])
+
+
+@pytest.mark.parametrize("mode", ["sync", "budgeted"])
+def test_cache_churn_equivalence(mode):
+    """Interleave add/remove/compaction with repeated queries: the
+    cached service must stay bit-identical to an uncached twin at every
+    drained state, and repeats in an unchanged state must actually hit.
+
+    Sync and budgeted modes evolve state deterministically, so the two
+    services hold identical indexes after identical op sequences (the
+    async driver's staging speed varies by thread timing — it gets the
+    single-service recompute test below instead).
+    """
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    kw = {} if mode == "sync" else {"compact_step_rows": 32}
+    cached = _service(cfg, params, **kw)
+    plain = _service(cfg, params, result_cache_bytes=0, **kw)
+
+    corpus = _corpus_batches(cfg, 2)
+    extra = _corpus_batches(cfg, 2, start=2)
+    for svc in (cached, plain):
+        svc.index_corpus(corpus)
+    qtok = np.asarray(corpus[0]["tokens"])[:6]     # repeat-heavy pool
+
+    def query_round():
+        ua = [cached.submit(qtok[i]) for i in range(6)]
+        ub = [plain.submit(qtok[i]) for i in range(6)]
+        ra, rb = _drain_all(cached), _drain_all(plain)
+        _assert_identical(ra, rb, ua, ub)
+        return ra, ua
+
+    r0, u0 = query_round()
+    assert not any(r0[u].cached for u in u0)
+
+    # unchanged state: repeats hit and stay identical
+    r1, u1 = query_round()
+    assert all(r1[u].cached for u in u1)
+    _assert_identical(r0, r1, u0, u1)
+    assert cached.stats["cache"]["hits"] >= 6
+    assert plain.stats["cache"]["hits"] == 0       # disabled twin
+
+    ids_added = []
+    for svc in (cached, plain):
+        ids_added.append(svc.add_documents([extra[0]]))
+    np.testing.assert_array_equal(ids_added[0], ids_added[1])
+    r2, u2 = query_round()
+    assert not any(r2[u].cached for u in u2)       # version moved
+
+    for svc in (cached, plain):
+        assert svc.remove_documents(ids_added[0][:16].tolist()) == 16
+    r3, u3 = query_round()
+    assert not any(r3[u].cached for u in u3)
+    # removed docs can never ride back in via the cache
+    gone = set(ids_added[0][:16].tolist())
+    for u in u3:
+        for j in range(r3[u].n_queries):
+            assert gone.isdisjoint(r3[u].ids[j].tolist())
+
+    # freeze + merge churn (delta overflow), then drain compaction fully
+    for svc in (cached, plain):
+        svc.add_documents([extra[1]])
+        while svc.compaction_tick():
+            pass
+    r4, u4 = query_round()
+    assert not any(r4[u].cached for u in u4)
+    r5, u5 = query_round()                         # stable again: hits
+    assert all(r5[u].cached for u in u5)
+    _assert_identical(r4, r5, u4, u5)
+
+
+def test_cache_churn_async_driver():
+    """Async mode: the worker's staging pace is nondeterministic, so the
+    oracle is the same service's own uncached recompute — served state
+    only changes on control-thread calls, and after flush() the version
+    is pinned, so a hit must be bit-identical to a fresh query()."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = _service(cfg, params, async_compaction=True)
+    corpus = _corpus_batches(cfg, 2)
+    extra = _corpus_batches(cfg, 2, start=2)
+    svc.index_corpus(corpus)
+    qtok = np.asarray(corpus[0]["tokens"])[:4]
+
+    def check_round():
+        # quiesce: finish all staged merges so background drains during
+        # the two query rounds cannot move the version between them
+        svc.driver.flush()
+        uids = [svc.submit(qtok[i]) for i in range(4)]
+        res = svc.drain_batches(force=True)
+        uids2 = [svc.submit(qtok[i]) for i in range(4)]
+        res2 = svc.drain_batches(force=True)
+        assert all(res2[u].cached for u in uids2)
+        direct, _ = svc.query({"tokens": jnp.asarray(qtok)})
+        for i, (u, u2) in enumerate(zip(uids, uids2)):
+            ids_d, dists_d = direct.reported(i)
+            for r in (res[u], res2[u2]):
+                np.testing.assert_array_equal(r.ids[0], np.asarray(ids_d))
+                np.testing.assert_array_equal(r.dists[0],
+                                              np.asarray(dists_d))
+
+    check_round()
+    ids = svc.add_documents([extra[0]])
+    check_round()
+    assert svc.remove_documents(ids[:20].tolist()) == 20
+    check_round()
+    svc.add_documents([extra[1]])                  # freeze + merge churn
+    check_round()
+    assert svc.stats["cache"]["hits"] >= 16
+    svc.shutdown()

@@ -222,6 +222,193 @@ def test_scheduler_registry_instruments():
     assert snap["histograms"]["repro_scheduler_batch_size"]["count"] == 1
 
 
+def test_scheduler_deadline_coalescing():
+    """With max_wait_s set, small queues are held until the oldest
+    request ages out (or the queue can fill max_batch); empty returns
+    count no phantom batch."""
+    now = [0.0]
+    sched = ShapeBucketScheduler(max_batch=8, min_bucket=4,
+                                 max_wait_s=1.0, clock=lambda: now[0])
+    for i in range(3):
+        sched.submit(i)
+    reqs, padded = sched.next_batch()
+    assert reqs == [] and padded == 0         # deadline not reached
+    now[0] = 0.5
+    assert sched.next_batch() == ([], 0)      # still inside the window
+    now[0] = 1.25
+    reqs, padded = sched.next_batch()
+    assert len(reqs) == 3 and padded == 4     # aged out: coalesced batch
+    assert all(abs(r.wait_s - 1.25) < 1e-9 for r in reqs)
+    # a full max_batch dispatches immediately, deadline or not
+    for i in range(8):
+        sched.submit(i)
+    reqs, padded = sched.next_batch()
+    assert len(reqs) == 8 and padded == 8
+    st = sched.stats()
+    assert st["batches"] == 2 and st["requests_batched"] == 11
+    assert abs(st["queue_wait_max_s"] - 1.25) < 1e-9
+
+
+def test_scheduler_force_flush_inside_deadline():
+    now = [0.0]
+    sched = ShapeBucketScheduler(max_batch=8, min_bucket=4,
+                                 max_wait_s=60.0, clock=lambda: now[0])
+    sched.submit("a")
+    assert sched.next_batch() == ([], 0)
+    reqs, padded = sched.next_batch(force=True)
+    assert len(reqs) == 1 and padded == 4
+    assert sched.next_batch(force=True) == ([], 0)   # empty stays empty
+
+
+def test_scheduler_admission_control():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry(enabled=True)
+    sched = ShapeBucketScheduler(max_batch=8, max_queue=4, registry=reg)
+    uids = [sched.submit(i) for i in range(6)]
+    assert all(u is not None for u in uids[:4])
+    assert uids[4] is None and uids[5] is None       # shed, not queued
+    assert len(sched.queue) == 4
+    st = sched.stats()
+    assert st["submits"] == 4 and st["rejects"] == 2
+    snap = reg.snapshot()
+    assert snap["counters"]["repro_scheduler_rejects_total"] == 2
+    assert snap["counters"]["repro_scheduler_submits_total"] == 4
+    # a drain frees capacity and admission recovers
+    sched.next_batch()
+    assert sched.submit("again") is not None
+
+
+def test_scheduler_empty_drain_counts_no_phantom_batch():
+    """The empty-pop metric fix: an empty (or deadline-held) drain must
+    not bump batches_total or record a 0 in the batch-size histogram —
+    but the background tick still runs every call."""
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry(enabled=True)
+    sched = ShapeBucketScheduler(max_batch=8, min_bucket=4, registry=reg,
+                                 background_tick=lambda: None)
+    for _ in range(3):
+        sched.next_batch()
+    snap = reg.snapshot()
+    assert snap["counters"]["repro_scheduler_ticks_total"] == 3
+    assert snap["counters"].get("repro_scheduler_batches_total", 0) == 0
+    assert snap["histograms"]["repro_scheduler_batch_size"]["count"] == 0
+    sched.submit("x")
+    sched.next_batch()
+    snap = reg.snapshot()
+    assert snap["counters"]["repro_scheduler_batches_total"] == 1
+    assert snap["histograms"]["repro_scheduler_batch_size"]["count"] == 1
+    assert snap["histograms"]["repro_scheduler_queue_wait_seconds"][
+        "count"] == 1
+
+
+def test_scheduler_stats_schema():
+    from repro.obs.schema import SCHEDULER_STATS_KEYS
+    sched = ShapeBucketScheduler(max_batch=8)
+    assert set(sched.stats()) == SCHEDULER_STATS_KEYS
+
+
+def test_result_cache_lru_and_version_purge():
+    from repro.obs.schema import CACHE_STATS_KEYS
+    from repro.serve import ResultCache
+
+    def entry(seed, k=64):
+        rng = np.random.default_rng(seed)
+        return ([rng.integers(0, 100, k)], [rng.random(k, np.float32)])
+
+    cache = ResultCache(max_bytes=4096)
+    assert set(cache.stats()) == CACHE_STATS_KEYS
+    tok = np.arange(8, dtype=np.int32)[None, :]
+    keys = [cache.key(1, 0.5, tok + i) for i in range(6)]
+    for i, k in enumerate(keys):
+        cache.put(k, *entry(i))
+    assert cache._bytes <= 4096
+    assert len(cache) < 6                     # LRU sweep evicted
+    assert cache.stats()["evictions"] > 0
+    # newest entries survive; oldest are gone
+    assert cache.get(keys[-1]) is not None
+    assert cache.get(keys[0]) is None
+    # a version move purges everything older on first sight
+    cache.put(cache.key(2, 0.5, tok), *entry(9))
+    n_v1 = sum(1 for k in cache._entries if k[0] == 1)
+    assert cache.purge_stale(2) == n_v1 and n_v1 >= 1
+    assert all(k[0] == 2 for k in cache._entries)
+    assert cache.purge_stale(2) == 0               # seen version: no scan
+    assert cache.stats()["stale_drops"] == n_v1
+    # distinct radius / dtype / shape fingerprints never collide
+    assert cache.key(1, 0.5, tok) != cache.key(1, 0.6, tok)
+    assert cache.key(1, 0.5, tok) != cache.key(
+        1, 0.5, tok.astype(np.int64))
+    # disabled cache (byte budget 0) stores nothing
+    off = ResultCache(max_bytes=0)
+    assert not off.put(off.key(1, 0.5, tok), *entry(0))
+    assert off.get(off.key(1, 0.5, tok)) is None
+
+
+def test_submit_drain_matches_direct_query():
+    """The coalesced path reports exactly what per-request query() does:
+    multi-row requests are scattered back intact, and resubmits in an
+    unchanged index state are served from the cache bit-identically."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64))
+    b = lm_batch(3, 0, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+    b.pop("labels")
+    svc.index_corpus([b])
+    qb = lm_batch(4, 0, batch=6, seq=12, vocab=cfg.vocab, cfg=cfg)
+    toks = np.asarray(qb["tokens"])
+
+    # requests of 1, 2, and 3 query rows coalesce into one batch
+    u1 = svc.submit(toks[0])                       # 1-D row: one query
+    u2 = svc.submit({"tokens": toks[1:3]})
+    u3 = svc.submit(toks[3:6])
+    out = svc.drain_batches()
+    assert set(out) == {u1, u2, u3}
+    assert [out[u].n_queries for u in (u1, u2, u3)] == [1, 2, 3]
+    assert not any(out[u].cached for u in (u1, u2, u3))
+
+    direct, _ = svc.query({"tokens": jnp.asarray(toks)})
+    flat_ids = [out[u].ids[j] for u in (u1, u2, u3)
+                for j in range(out[u].n_queries)]
+    flat_d = [out[u].dists[j] for u in (u1, u2, u3)
+              for j in range(out[u].n_queries)]
+    for i in range(6):
+        ids_d, dists_d = direct.reported(i)
+        np.testing.assert_array_equal(flat_ids[i], np.asarray(ids_d))
+        np.testing.assert_array_equal(flat_d[i], np.asarray(dists_d))
+
+    # same state, same queries -> pure cache hits, same bits
+    u4 = svc.submit({"tokens": toks[1:3]})
+    out2 = svc.drain_batches()
+    assert out2[u4].cached
+    for j in range(2):
+        np.testing.assert_array_equal(out2[u4].ids[j], out[u2].ids[j])
+        np.testing.assert_array_equal(out2[u4].dists[j], out[u2].dists[j])
+    assert svc.stats["cache"]["hits"] == 1
+    # serving counters advanced only for real (non-pad, non-hit) rows
+    assert svc.stats["queries"] == 6 + 6           # drain + direct
+
+
+def test_drain_respects_deadline_until_forced():
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    svc = RetrievalService(cfg, PAR, params,
+                           RetrievalConfig(radius=0.5, tables=8,
+                                           num_buckets=256, hll_m=32,
+                                           cap=64,
+                                           coalesce_max_wait_s=3600.0))
+    b = lm_batch(3, 0, batch=32, seq=12, vocab=cfg.vocab, cfg=cfg)
+    b.pop("labels")
+    svc.index_corpus([b])
+    u = svc.submit(np.asarray(b["tokens"])[0])
+    assert svc.drain_batches() == {}               # held for coalescing
+    assert svc.stats["scheduler"]["queue_depth"] == 1
+    out = svc.drain_batches(force=True)
+    assert set(out) == {u} and not out[u].cached
+
+
 def test_retrieval_service_stats_schema_and_metrics(tmp_path):
     """stats keys match the documented schema exactly; metrics() is one
     JSON round-trippable snapshot; shutdown dumps it to disk."""
@@ -245,8 +432,11 @@ def test_retrieval_service_stats_schema_and_metrics(tmp_path):
     st = svc.stats
     assert set(st) == retrieval_stats_keys(driver=True)
     assert set(st["work_seconds"]) == WORK_PHASE_KEYS
-    from repro.obs.schema import DRIVER_STATS_KEYS
+    from repro.obs.schema import (CACHE_STATS_KEYS, DRIVER_STATS_KEYS,
+                                  SCHEDULER_STATS_KEYS)
     assert set(st["driver"]) == DRIVER_STATS_KEYS
+    assert set(st["scheduler"]) == SCHEDULER_STATS_KEYS
+    assert set(st["cache"]) == CACHE_STATS_KEYS
 
     qb = lm_batch(4, 0, batch=8, seq=12, vocab=cfg.vocab, cfg=cfg)
     qb.pop("labels")
