@@ -35,7 +35,10 @@ def main() -> None:
                          "the fused-vs-composed kernel comparison, --emit "
                          "BENCH_serve.json the closed-loop serving "
                          "throughput bench (coalescing + result cache vs "
-                         "naive). Skips the paper tables")
+                         "naive), --emit BENCH_serve_mt.json the multi-"
+                         "tenant flood-isolation bench (per-tenant token "
+                         "buckets under a noisy neighbor). Skips the "
+                         "paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
 
@@ -80,6 +83,26 @@ def main() -> None:
         print(f"kernel_fused_min_speedup,{0:.1f},"
               f"{worst:.2f}x composed (impl={out['impl']}, "
               f"tpu={out['on_tpu']})")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    # "serve_mt" must dispatch before the "serve" substring check below
+    if args.emit and "serve_mt" in os.path.basename(args.emit):
+        from benchmarks import serve_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = serve_bench.multi_tenant_main(scale, emit=args.emit)
+        print(f"serve_mt_quiet_p99_solo,"
+              f"{1e6 * rows['quiet_p99_solo_s']:.0f},"
+              f"quiet-tenant p99 with no flood")
+        print(f"serve_mt_quiet_p99_flood,"
+              f"{1e6 * rows['quiet_p99_flood_s']:.0f},"
+              f"isolation ratio {rows['isolation_ratio_p99']:.2f}x "
+              f"(no-quota counterfactual "
+              f"{rows['noquota_ratio_p99']:.2f}x); flood "
+              f"{rows['noisy_rejected']} rejected / "
+              f"{rows['noisy_admitted']} admitted at the token bucket")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

@@ -167,6 +167,27 @@ class CheckpointManager:
         index.load_state_dict(state)
         return step
 
+    def collection_names(self, step: Optional[int] = None):
+        """Collections present in a committed step's manifest.
+
+        Multi-tenant snapshots (``RetrievalService.checkpoint`` with
+        collections) nest every tenant under ``collections/<name>/...``
+        leaf paths — one per-collection manifest subtree.  This reads
+        JUST the manifest (no array loads), so callers can inspect or
+        selectively restore tenants.  Returns sorted names; [] when the
+        step predates collections or nothing is committed.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return []
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        names = {path.split("/")[1] for path in manifest["leaves"]
+                 if path.startswith("collections/")}
+        return sorted(names)
+
     def restore_tree(self, step: Optional[int] = None):
         """Load a committed step as nested dicts rebuilt from leaf paths.
 

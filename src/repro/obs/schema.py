@@ -13,21 +13,32 @@ from __future__ import annotations
 __all__ = ["RETRIEVAL_SERVICE_KEYS", "COMPACTION_STATS_KEYS",
            "INDEX_STATS_KEYS", "SHARDED_INDEX_EXTRA_KEYS",
            "DRIVER_STATS_KEYS", "SCHEDULER_STATS_KEYS",
-           "CACHE_STATS_KEYS", "WORK_PHASE_KEYS", "EVENT_BASE_FIELDS",
+           "SCHEDULER_TENANT_KEYS", "CACHE_STATS_KEYS",
+           "COLLECTION_STATS_KEYS", "COLLECTION_MANAGER_KEYS",
+           "WORK_PHASE_KEYS", "EVENT_BASE_FIELDS",
            "retrieval_stats_keys"]
 
 # RetrievalService's own serving counters (before the index_stats
-# merge); "scheduler" and "cache" are sub-dicts pinned below
+# merge); "scheduler", "cache", and "collections" are sub-dicts pinned
+# below (the collections sub-dict is present unconditionally — empty
+# manager, stable schema)
 RETRIEVAL_SERVICE_KEYS = frozenset({
     "queries", "linear_served", "frac_linear",
     "compaction_ticks", "idle_ticks", "index_size",
-    "scheduler", "cache"})
+    "scheduler", "cache", "collections"})
 
-# ShapeBucketScheduler.stats() — the coalescing/admission view
+# ShapeBucketScheduler.stats() — the coalescing/admission view;
+# "tenants" is the per-collection sub-dict pinned below
 SCHEDULER_STATS_KEYS = frozenset({
     "queue_depth", "submits", "rejects", "batches", "requests_batched",
     "ticks", "queue_wait_sum_s", "queue_wait_max_s",
-    "max_batch", "max_wait_s", "max_queue"})
+    "max_batch", "max_wait_s", "max_queue", "tenants"})
+
+# stats["scheduler"]["tenants"][<collection>] — one tenant's
+# token-bucket + drain view
+SCHEDULER_TENANT_KEYS = frozenset({
+    "submits", "rejects", "batched", "queue_depth", "tokens",
+    "rate", "burst", "weight", "queue_wait_max_s"})
 
 # ResultCache.stats() — the version-keyed result cache view
 CACHE_STATS_KEYS = frozenset({
@@ -51,11 +62,23 @@ SHARDED_INDEX_EXTRA_KEYS = frozenset({
     "shards", "level_n_pads", "live_per_shard", "delta_per_shard",
     "shard_skew", "placement", "routing"})
 
-# CompactionDriver.stats()
+# CompactionDriver.stats() — index-derived fields aggregate over the
+# attached collection pool; "fairness" maps collection -> worker ops
 DRIVER_STATS_KEYS = frozenset({
     "worker_alive", "pending_gathers", "staged_rows", "staged_ready",
     "budget_rows", "stage_calls", "prepares", "drains", "applied",
-    "flushes", "worker_errors", "work_seconds"})
+    "flushes", "worker_errors", "collections", "fairness",
+    "work_seconds"})
+
+# CollectionManager.stats()["collections"][<name>] — one tenant's view
+COLLECTION_STATS_KEYS = frozenset({
+    "n_live", "version", "segments", "pending_merges", "delta_live",
+    "queries", "linear_served", "inserts", "deletes",
+    "quota_rate", "quota_burst", "quota_weight"})
+
+# CollectionManager.stats() top level
+COLLECTION_MANAGER_KEYS = frozenset({
+    "n_collections", "created_total", "dropped_total", "collections"})
 
 # WorkPhases.as_dict() — the compaction work-seconds sub-dict
 WORK_PHASE_KEYS = frozenset({"stage", "build", "apply", "full", "total"})

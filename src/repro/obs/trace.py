@@ -130,6 +130,19 @@ class QueryTracer:
         self._registry = registry
         self._m_phase: Dict[tuple, object] = {}
         self._last_impl: Optional[str] = None
+        # multi-tenant context: extra fields stamped on every span
+        # recorded while set (e.g. {"collection": name}); the serving
+        # layer sets it around a collection's query — control-thread
+        # only, like the query path itself
+        self._context: Dict[str, object] = {}
+
+    def set_context(self, **fields) -> None:
+        """Stamp ``fields`` on subsequently recorded spans (pass
+        nothing to clear).  ``RetrievalService`` brackets each
+        collection's index query with
+        ``set_context(collection=name)`` so one shared tracer's spans
+        stay attributable per tenant."""
+        self._context = {k: v for k, v in fields.items() if v is not None}
 
     def _phase_hist(self, phase: str, impl: str):
         key = (phase, impl)
@@ -187,9 +200,11 @@ class QueryTracer:
                    / np.maximum(np.asarray(cand_actual, np.float64), 1.0))
 
         spans = []
+        ctx = dict(self._context)
         for i in range(nq):
             strat = "lsh" if use[i] else "linear"
             spans.append({
+                **ctx,
                 "strategy": strat,
                 "forced": forced is not None,
                 "collisions": int(collisions[i]),

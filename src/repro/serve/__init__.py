@@ -1,9 +1,12 @@
 from repro.serve.cache import ResultCache
+from repro.serve.collections import Collection, CollectionManager
 from repro.serve.engine import generate, make_serve_prefill, make_serve_step
 from repro.serve.retrieval import (RequestResult, RetrievalConfig,
                                    RetrievalService)
-from repro.serve.scheduler import ShapeBucketScheduler, route_and_group
+from repro.serve.scheduler import (ShapeBucketScheduler, TenantQuota,
+                                   route_and_group)
 
 __all__ = ["generate", "make_serve_prefill", "make_serve_step",
-           "RequestResult", "ResultCache", "RetrievalConfig",
-           "RetrievalService", "ShapeBucketScheduler", "route_and_group"]
+           "Collection", "CollectionManager", "RequestResult",
+           "ResultCache", "RetrievalConfig", "RetrievalService",
+           "ShapeBucketScheduler", "TenantQuota", "route_and_group"]

@@ -1,15 +1,23 @@
 """Version-keyed LRU result cache for the serving path.
 
-Keys are ``(index_version, radius, query_fingerprint)``: the index
-bumps its monotonic ``version`` on every mutation that could change a
-reported set (insert, delete, freeze, merge swap, sharded rebalance,
-restore), so a repeated query hits only while the index is bit-for-bit
-the one the cached result was computed against.  Staleness is
-therefore impossible by construction — no TTLs, no invalidation
+Keys are ``(collection, index_version, radius, query_fingerprint)``:
+the index bumps its monotonic ``version`` on every mutation that could
+change a reported set (insert, delete, freeze, merge swap, sharded
+rebalance, restore), so a repeated query hits only while the index is
+bit-for-bit the one the cached result was computed against.  Staleness
+is therefore impossible by construction — no TTLs, no invalidation
 callbacks; a mutation simply makes every old key unreachable.  Dead
 entries are reclaimed two ways: ``purge_stale`` drops them eagerly the
 first time a new version is seen, and the byte-budget LRU sweep evicts
 whatever survives.
+
+Multi-tenant serving (docs/serving.md "Collections") shares ONE cache
+across every collection: the collection name leads the key, versions
+are tracked per collection (each tenant's index has its own monotonic
+counter), and ``drop_collection`` purges a dropped tenant eagerly —
+required for correctness, since a re-created collection's fresh index
+restarts at version 0 and would otherwise alias the old corpus.  The
+default (single-tenant) corpus uses the reserved empty name ``""``.
 
 Values are per-query-row ``(ids, dists)`` numpy pairs — exactly what
 ``QueryResult.reported`` / ``ShardedQueryResult.reported`` return —
@@ -33,7 +41,8 @@ _ENTRY_OVERHEAD = 256
 
 
 class ResultCache:
-    """Byte-budgeted LRU over ``(version, radius, fingerprint)`` keys.
+    """Byte-budgeted LRU over ``(collection, version, radius,
+    fingerprint)`` keys.
 
     ``max_bytes <= 0`` disables caching entirely: ``get`` always
     misses and ``put`` is a no-op, so callers never need a second code
@@ -46,7 +55,8 @@ class ResultCache:
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._nbytes: Dict[tuple, int] = {}
         self._bytes = 0
-        self._version_seen: Optional[int] = None
+        # per-collection: each tenant's index versions independently
+        self._version_seen: Dict[str, int] = {}
         self._hits = 0
         self._misses = 0
         self._puts = 0
@@ -78,8 +88,13 @@ class ResultCache:
         h.update(a.tobytes())
         return h.hexdigest()
 
-    def key(self, version: int, radius: float, tokens: np.ndarray) -> tuple:
-        return (int(version), float(radius), self.fingerprint(tokens))
+    def key(self, version: int, radius: float, tokens: np.ndarray,
+            collection: str = "") -> tuple:
+        """``(collection, version, radius, fingerprint)`` — the
+        collection leads so a tenant's entries are a contiguous notion,
+        never shared across names; ``""`` is the default corpus."""
+        return (str(collection), int(version), float(radius),
+                self.fingerprint(tokens))
 
     # ------------------------------------------------------------ get/put
     def get(self, key: tuple):
@@ -118,21 +133,39 @@ class ResultCache:
         self._g_bytes.set(self._bytes)
         return True
 
-    def purge_stale(self, version: int) -> int:
-        """Drop every entry keyed to an older index version.
+    def purge_stale(self, version: int, collection: str = "") -> int:
+        """Drop every entry of ``collection`` keyed to an older index
+        version.
 
         O(entries), but only does work the first time each new version
-        is seen — the usual call site (once per served batch) is a
-        single int compare.  Returns the number dropped.
+        is seen per collection — the usual call site (once per served
+        batch) is a single dict lookup + int compare.  Returns the
+        number dropped.
         """
-        if version == self._version_seen:
+        collection = str(collection)
+        if self._version_seen.get(collection) == version:
             return 0
-        self._version_seen = version
-        stale = [k for k in self._entries if k[0] != version]
+        self._version_seen[collection] = version
+        stale = [k for k in self._entries
+                 if k[0] == collection and k[1] != version]
         for k in stale:
             self._drop(k, stale=True, count_evict=False)
         self._g_bytes.set(self._bytes)
         return len(stale)
+
+    def drop_collection(self, collection: str) -> int:
+        """Drop ALL of one collection's entries (counted as stale
+        drops) and forget its version watermark.  MUST run when a
+        collection is dropped: a later re-create restarts the index
+        version at 0, and surviving entries would alias the old corpus
+        bit-for-bit.  Returns the number dropped."""
+        collection = str(collection)
+        self._version_seen.pop(collection, None)
+        dead = [k for k in self._entries if k[0] == collection]
+        for k in dead:
+            self._drop(k, stale=True, count_evict=False)
+        self._g_bytes.set(self._bytes)
+        return len(dead)
 
     def _drop(self, key: tuple, *, stale: bool, count_evict: bool) -> None:
         del self._entries[key]

@@ -39,13 +39,14 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core import CostModel
-from repro.core.engine import _pad_size
+from repro.core.engine import QueryEngine, _pad_size
 from repro.core.lsh import make_family
 from repro.models.parallel import ParallelConfig
 from repro.models.transformer import forward_embed
 from repro.obs import Observability, to_prometheus
 from repro.serve.cache import ResultCache
-from repro.serve.scheduler import ShapeBucketScheduler
+from repro.serve.collections import Collection, CollectionManager
+from repro.serve.scheduler import ShapeBucketScheduler, TenantQuota
 from repro.streaming import (CompactionDriver, CompactionPolicy,
                              DynamicHybridIndex,
                              ShardedDynamicHybridIndex)
@@ -205,6 +206,19 @@ class RetrievalService:
             max_wait_s=rcfg.coalesce_max_wait_s,
             max_queue=rcfg.max_queue)
         self.cache = ResultCache(rcfg.result_cache_bytes, registry=reg)
+        # Multi-tenant collections (docs/serving.md "Collections"):
+        # named per-tenant indexes built through one factory that
+        # shares the family (one lru-cached jitted hash), one
+        # QueryEngine, the scheduler's per-tenant token buckets, the
+        # collection-keyed cache, and — in async mode — one
+        # CompactionDriver pool.  The default corpus (index_corpus)
+        # keeps the reserved name "" and never lives in the manager.
+        self._family = None             # shared LSH family, built lazily
+        self._shared_engine: Optional[QueryEngine] = None
+        self._tick_rr = 0               # budgeted-tick round-robin cursor
+        self.collections = CollectionManager(
+            index_factory=self._make_index,
+            obs=self.obs, scheduler=self.scheduler, cache=self.cache)
 
     def embed(self, batch: Dict[str, jax.Array]) -> jax.Array:
         """Normalized (B, d_model) embeddings for one token batch."""
@@ -223,19 +237,30 @@ class RetrievalService:
             return max(r.delta_capacity // 2, 1)
         return r.compact_step_rows
 
-    def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
-        """Embed + build the corpus index per ``RetrievalConfig`` (mesh
-        set -> sharded index with the configured routing/placement);
-        returns the corpus size.  With ``async_compaction`` a
-        ``CompactionDriver`` is started on the new index (any previous
-        driver is stopped first)."""
-        if self.driver is not None:
-            self.driver.stop()
-            self.driver = None
-        corpus = self._embed_corpus(batches)
+    def _lsh_family(self, d: int):
+        """The ONE LSH family (and shared ``QueryEngine``) every index
+        this service builds is constructed around — frozen + hashable,
+        so ``bucket_fn_for``'s lru cache hands all collections the same
+        jitted hash."""
+        if self._family is None or self._family.d != d:
+            r = self.rcfg
+            self._family = make_family("cosine", d=d, L=r.tables,
+                                       r=r.radius, delta=r.delta)
+            self._shared_engine = QueryEngine(
+                CostModel(alpha=1.0, beta=r.beta_over_alpha),
+                tracer=self.obs.tracer)
+        return self._family
+
+    def _make_index(self, obs: Optional[Observability] = None,
+                    d: Optional[int] = None):
+        """Build one fresh, empty streaming index per ``RetrievalConfig``
+        (the collection factory; ``index_corpus`` reuses it for the
+        default corpus).  All indexes share the family, the engine, and
+        the service's obs bundle (the manager passes a per-collection
+        event facade as ``obs``)."""
         r = self.rcfg
-        fam = make_family("cosine", d=corpus.shape[1], L=r.tables,
-                          r=r.radius, delta=r.delta)
+        d = int(d) if d is not None else int(self.cfg.d_model)
+        fam = self._lsh_family(d)
         common = dict(
             num_buckets=r.num_buckets, m=r.hll_m, cap=r.cap,
             delta_capacity=r.delta_capacity,
@@ -244,46 +269,110 @@ class RetrievalService:
                 delta_fill=r.compact_delta_fill,
                 tombstone_ratio=r.compact_tombstone_ratio,
                 fanout=r.compact_fanout,
-                step_rows=self._step_rows()))
-        common["obs"] = self.obs
+                step_rows=self._step_rows()),
+            obs=obs if obs is not None else self.obs,
+            engine=self._shared_engine)
         if r.mesh is not None:
-            self.index = ShardedDynamicHybridIndex(
+            index = ShardedDynamicHybridIndex(
                 fam, mesh=r.mesh, data_axis=r.mesh_axis,
                 routing=r.shard_routing, max_out=r.shard_max_out,
                 placement=r.shard_placement, **common)
         else:
-            self.index = DynamicHybridIndex(fam, **common)
-        self.index.build(corpus)
-        if r.async_compaction:
+            index = DynamicHybridIndex(fam, **common)
+        index.build(np.zeros((0, d), np.float32))
+        return index
+
+    def _ensure_driver(self) -> CompactionDriver:
+        """The ONE async-compaction driver (created + started on first
+        need); its worker round-robins over every attached index —
+        default corpus and collections alike."""
+        if self.driver is None:
             self.driver = CompactionDriver(
-                self.index, budget_rows=self._step_rows(),
-                obs=self.obs).start()
+                budget_rows=self._step_rows(), obs=self.obs).start()
+            self.collections.driver = self.driver
+        return self.driver
+
+    def index_corpus(self, batches: Iterable[Dict[str, jax.Array]]):
+        """Embed + build the default corpus index per
+        ``RetrievalConfig`` (mesh set -> sharded index with the
+        configured routing/placement); returns the corpus size.  With
+        ``async_compaction`` the index is attached to the service's
+        shared ``CompactionDriver`` under the reserved name ``""``
+        (detached first on a rebuild — collections stay attached)."""
+        if self.driver is not None:
+            self.driver.detach("")
+        corpus = self._embed_corpus(batches)
+        self.index = self._make_index(d=corpus.shape[1])
+        self.index.build(corpus)
+        if self.rcfg.async_compaction:
+            self._ensure_driver().attach("", self.index)
         return corpus.shape[0]
 
+    # ------------------------------------------------- collection lifecycle
+    def create_collection(self, name: str,
+                          batches: Optional[Iterable] = None, *,
+                          quota: Optional[TenantQuota] = None) -> int:
+        """Create a named collection (docs/serving.md "Collections");
+        returns its initial corpus size.
+
+        ``batches`` (optional) embeds + builds the tenant's initial
+        corpus exactly like ``index_corpus`` does for the default one;
+        omitted = empty collection, ready for ``add_documents``.
+        ``quota`` installs the tenant's scheduler token bucket + drain
+        weight.  In async mode the new index attaches to the shared
+        driver — after the build, so the worker never races it.
+        """
+        if self.rcfg.async_compaction:
+            self.collections.driver = self._ensure_driver()
+        col = self.collections.create(name, quota=quota, attach=False)
+        n = 0
+        if batches is not None:
+            corpus = self._embed_corpus(batches)
+            col.index.build(corpus)
+            n = int(corpus.shape[0])
+        self.collections.attach_driver(name)
+        if self.driver is not None:
+            self.driver.notify()
+        return n
+
+    def drop_collection(self, name: str) -> "Collection":
+        """Drop a named collection: detached from the driver, queued
+        requests discarded, cache entries purged.  Returns the removed
+        ``Collection`` (its index is still queryable by the caller)."""
+        return self.collections.drop(name)
+
+    def _index_for(self, collection: str):
+        """Resolve a collection id to its index ("" = default corpus)."""
+        if not collection:
+            assert self.index is not None, "call index_corpus first"
+            return self.index
+        return self.collections.get(collection).index
+
     # ------------------------------------------------------- live mutation
-    def add_documents(self,
-                      batches: Iterable[Dict[str, jax.Array]]) -> np.ndarray:
+    def add_documents(self, batches: Iterable[Dict[str, jax.Array]],
+                      collection: str = "") -> np.ndarray:
         """Embed + insert new documents; returns their doc ids.
 
         Inserts land in the delta segment(s) (no rebuild); compaction
         folds them into the main segment per the configured policy.
+        ``collection`` targets a named collection ("" = default corpus).
         """
-        assert self.index is not None, "call index_corpus first"
-        ids = self.index.insert(self._embed_corpus(batches))
+        ids = self._index_for(collection).insert(
+            self._embed_corpus(batches))
         if self.driver is not None:
             self.driver.notify()      # a freeze may have queued a merge
         return ids
 
-    def remove_documents(self, doc_ids: Sequence[int]) -> int:
+    def remove_documents(self, doc_ids: Sequence[int],
+                         collection: str = "") -> int:
         """Tombstone documents by id; returns #removed."""
-        assert self.index is not None, "call index_corpus first"
-        removed = self.index.delete(doc_ids)
+        removed = self._index_for(collection).delete(doc_ids)
         if self.driver is not None:
             self.driver.notify()      # tombstone pressure may queue work
         return removed
 
     def query(self, batch: Dict[str, jax.Array],
-              radius: Optional[float] = None):
+              radius: Optional[float] = None, collection: str = ""):
         """Returns (QueryResult | ShardedQueryResult, embeddings).
 
         Deliberately does NOT advance compaction: with
@@ -291,34 +380,58 @@ class RetrievalService:
         wire ``compaction_tick`` as the scheduler's ``background_tick``
         (or call it from the serving loop), never inside a request.
         """
-        assert self.index is not None, "call index_corpus first"
+        index = self._index_for(collection)
         q = self.embed(batch)
-        res = self.index.query(q, radius or self.rcfg.radius)
+        res = self._routed_query(index, q, radius or self.rcfg.radius,
+                                 collection)
+        return res, q
+
+    def _routed_query(self, index, emb, radius: float, collection: str):
+        """One index query with per-tenant attribution: spans recorded
+        while this runs carry the collection (shared tracer context),
+        and counts land in both the service-wide totals and — for named
+        collections — the per-tenant labeled series."""
+        tracer = self.obs.tracer
+        tracer.set_context(collection=collection or None)
+        try:
+            res = index.query(emb, radius)
+        finally:
+            tracer.set_context()
         self._queries_served += res.n_queries
         # exact per-query linear count from the route partition (the
         # frac_linear*n round-trip drifts under rounding)
         self._linear_served += res.n_linear
         self._m_queries.inc(res.n_queries)
         self._m_linear.inc(res.n_linear)
-        return res, q
+        if collection:
+            self.collections.note_query(collection, res.n_queries,
+                                        res.n_linear)
+        return res
 
     # ------------------------------------------- coalesced serving path
-    def submit(self, batch, radius: Optional[float] = None
-               ) -> Optional[int]:
+    def submit(self, batch, radius: Optional[float] = None,
+               collection: str = "") -> Optional[int]:
         """Enqueue one retrieval request for coalesced dispatch.
 
         ``batch`` is a token batch dict (or a bare token array); a 1-D
-        row is treated as a single query.  Returns the request uid, or
-        None when admission control sheds it (scheduler queue full —
-        counted in ``repro_scheduler_rejects_total``).  Results come
-        back from ``drain_batches`` keyed by this uid.
+        row is treated as a single query.  ``collection`` routes to a
+        named collection ("" = default corpus; unknown names raise at
+        the door, not at drain time).  Returns the request uid, or
+        None when admission control sheds it — the tenant's own token
+        bucket, or the global queue bound (both counted in
+        ``repro_scheduler_rejects_total``, per-collection labeled).
+        Results come back from ``drain_batches`` keyed by this uid.
         """
+        collection = str(collection)
+        if collection:
+            self.collections.get(collection)   # raise early on unknown
         tokens = batch["tokens"] if isinstance(batch, dict) else batch
         tokens = np.asarray(tokens)
         if tokens.ndim == 1:
             tokens = tokens[None, :]
         r = float(radius if radius is not None else self.rcfg.radius)
-        return self.scheduler.submit({"tokens": tokens, "radius": r})
+        return self.scheduler.submit({"tokens": tokens, "radius": r},
+                                     collection=collection)
 
     def drain_batches(self, max_batches: Optional[int] = None,
                       force: bool = False) -> Dict[int, "RequestResult"]:
@@ -331,7 +444,8 @@ class RetrievalService:
         other duties.  Returns uid -> ``RequestResult`` for every
         request served this call.
         """
-        assert self.index is not None, "call index_corpus first"
+        assert self.index is not None or len(self.collections), \
+            "call index_corpus or create_collection first"
         out: Dict[int, RequestResult] = {}
         served = 0
         while max_batches is None or served < max_batches:
@@ -344,19 +458,28 @@ class RetrievalService:
 
     def _serve_batch(self, reqs) -> Dict[int, "RequestResult"]:
         """Serve one formed batch: cache lookups first, then one embed +
-        one routed index query per (radius, seq) miss group, scattered
-        back per request by uid."""
-        version = self.index.version
-        self.cache.purge_stale(version)
+        one routed index query per (collection, radius, seq) miss
+        group, scattered back per request by uid.  A formed batch may
+        span tenants (the scheduler drains weighted-fair across them);
+        each tenant's requests dispatch against its own index at its
+        own version."""
+        versions: Dict[str, int] = {}
         out: Dict[int, RequestResult] = {}
-        # (radius, seq_len) -> [(req, key)]; rows of one group share one
-        # compiled embed + query shape, so they coalesce into one dense
-        # pow2 dispatch through the PR 7 fused kernels
+        # (collection, radius, seq_len) -> [(req, key)]; rows of one
+        # group share one index, one compiled embed + query shape, so
+        # they coalesce into one dense pow2 dispatch through the PR 7
+        # fused kernels
         groups: Dict[tuple, list] = {}
         for req in reqs:
+            col = req.collection
+            version = versions.get(col)
+            if version is None:
+                version = self._index_for(col).version
+                self.cache.purge_stale(version, collection=col)
+                versions[col] = version
             tokens = req.payload["tokens"]
             radius = req.payload["radius"]
-            key = self.cache.key(version, radius, tokens)
+            key = self.cache.key(version, radius, tokens, collection=col)
             hit = self.cache.get(key)
             if hit is not None:
                 ids, dists = hit
@@ -365,13 +488,15 @@ class RetrievalService:
                     n_queries=len(ids), cached=True,
                     queue_wait_s=req.wait_s)
                 continue
-            groups.setdefault((radius, tokens.shape[1]), []).append(
+            groups.setdefault((col, radius, tokens.shape[1]), []).append(
                 (req, key))
-        for (radius, _seq), members in groups.items():
-            self._serve_miss_group(radius, members, out)
+        for (col, radius, _seq), members in groups.items():
+            self._serve_miss_group(col, radius, members, out)
         return out
 
-    def _serve_miss_group(self, radius: float, members, out) -> None:
+    def _serve_miss_group(self, collection: str, radius: float,
+                          members, out) -> None:
+        index = self._index_for(collection)
         rows = np.concatenate([req.payload["tokens"]
                                for req, _ in members], axis=0)
         nq = rows.shape[0]
@@ -380,12 +505,19 @@ class RetrievalService:
             rows = np.concatenate(
                 [rows, np.repeat(rows[-1:], n_pad - nq, axis=0)], axis=0)
         emb = self.embed({"tokens": jnp.asarray(rows)})
-        res = self.index.query(emb, radius)
+        tracer = self.obs.tracer
+        tracer.set_context(collection=collection or None)
+        try:
+            res = index.query(emb, radius)
+        finally:
+            tracer.set_context()
         self._queries_served += nq
         n_linear = self._count_linear(res, nq)
         self._linear_served += n_linear
         self._m_queries.inc(nq)
         self._m_linear.inc(n_linear)
+        if collection:
+            self.collections.note_query(collection, nq, n_linear)
         off = 0
         for req, key in members:
             k = req.payload["tokens"].shape[0]
@@ -422,8 +554,14 @@ class RetrievalService:
         ``stats["compaction_ticks"]`` counts only ticks that actually
         ran work (a step that advanced a merge, or a drain that applied
         a swap); no-op ticks land in ``stats["idle_ticks"]``.
+
+        Multi-tenant: the driver's ``drain`` sweeps every attached
+        collection; in budgeted mode each tick advances ONE collection
+        with pending work, round-robin — the inline mirror of the
+        driver worker's fairness.
         """
-        if self.index is None:
+        indexes = self._all_indexes()
+        if not indexes:
             return False
         if self.driver is not None:
             if self.driver.drain() > 0:
@@ -432,43 +570,83 @@ class RetrievalService:
             else:
                 self._idle_ticks += 1
                 self._m_idle.inc()
-            return bool(self.index.has_compaction_work)
-        if self.index.has_compaction_work:
-            self._compaction_ticks += 1
-            self._m_ticks.inc()
-        else:
+            return any(bool(i.has_compaction_work) for i in indexes)
+        pending = [i for i in indexes if i.has_compaction_work]
+        if not pending:
             self._idle_ticks += 1
             self._m_idle.inc()
-        return bool(self.index.compact_step(self._step_rows()))
+            return False
+        self._compaction_ticks += 1
+        self._m_ticks.inc()
+        self._tick_rr += 1
+        index = pending[self._tick_rr % len(pending)]
+        more = bool(index.compact_step(self._step_rows()))
+        return more or len(pending) > 1
+
+    def _all_indexes(self) -> List:
+        """Default index (if built) + every collection's, in order."""
+        out = [self.index] if self.index is not None else []
+        out.extend(self.collections.get(n).index
+                   for n in self.collections.names())
+        return out
 
     # ------------------------------------------------- driver lifecycle
     def checkpoint(self, manager, step: int) -> None:
-        """Flush pending merge work, then snapshot the index.
+        """Flush pending merge work, then snapshot the FULL collection
+        tree: the default corpus index at the top level (the
+        pre-collections layout, so old checkpoints stay readable) plus
+        every named collection — index state and quota — nested under
+        ``collections/<name>/...`` (a per-collection manifest subtree;
+        ``CheckpointManager.collection_names`` lists them).
 
         The flush is the async-mode checkpoint barrier: every queued
-        merge finishes (stage remainder + swap) before ``save_index``
-        runs, so the snapshot never captures a half-staged merge and
-        the saved level structure is exactly what queries will see
-        after a restore.  ``manager`` is a ``CheckpointManager``.
+        merge finishes (stage remainder + swap) across ALL attached
+        collections before the save runs, so the snapshot never
+        captures a half-staged merge.  ``manager`` is a
+        ``CheckpointManager``.
         """
-        assert self.index is not None, "call index_corpus first"
+        assert self.index is not None or len(self.collections), \
+            "call index_corpus or create_collection first"
         if self.driver is not None:
             self.driver.flush()
-        manager.save_index(step, self.index)
+        state = self.index.state_dict() if self.index is not None else {}
+        cols = self.collections.state_dict()
+        if cols:
+            state = {**state, "collections": cols}
+        manager.save(step, state, blocking=True)
 
     def restore(self, manager, step: Optional[int] = None):
-        """Restore index state from a committed checkpoint (the index
-        must have been built with the same config).  The driver worker
-        is stopped around the state swap — staging must never run
-        against a stack being replaced — and restarted after; staged
-        progress is volatile by contract, so nothing is lost.  Returns
+        """Restore the full collection tree from a committed checkpoint
+        (the service must be configured the same as the one that
+        saved).  The driver worker is stopped around the state swap —
+        staging must never run against a stack being replaced — and
+        restarted after; staged progress is volatile by contract, so
+        nothing is lost.  Named collections are rebuilt exactly:
+        current ones dropped, saved ones re-created (with their saved
+        quotas) through the shared factory and loaded.  A fresh service
+        may restore directly — the default index is built on demand
+        when the checkpoint carries top-level corpus state.  Returns
         the restored step (None: no committed checkpoint)."""
-        assert self.index is not None, "call index_corpus first"
         if self.driver is not None:
             self.driver.stop()
-        restored = manager.restore_index(self.index, step=step)
+        state, restored = manager.restore_tree(step=step)
+        if state is None:
+            if self.driver is not None:
+                self.driver.start()
+            return None
+        cols = state.pop("collections", None) or {}
+        if self.rcfg.async_compaction:
+            self._ensure_driver()
+            self.driver.stop()
+        if state:
+            if self.index is None:
+                self.index = self._make_index()
+            self.index.load_state_dict(state)
+        self.collections.load_state_dict(cols)
         if self.driver is not None:
             self.driver.start()
+            if self.index is not None and "" not in self.driver.indexes():
+                self.driver.attach("", self.index)
         return restored
 
     def shutdown(self, flush: bool = True,
@@ -528,10 +706,14 @@ class RetrievalService:
         (max/mean live load; 1.0 = balanced), the active ``placement``
         policy, and cumulative ``rows_moved`` across shards.
 
-        The coalesced serving path adds two pinned sub-dicts:
+        The coalesced serving path adds three pinned sub-dicts:
         ``scheduler`` (queue depth, submits/rejects/batches, queue-wait
-        aggregates — SCHEDULER_STATS_KEYS) and ``cache`` (hit/miss/
-        evict/stale counters + byte budget — CACHE_STATS_KEYS).
+        aggregates, per-tenant quota views — SCHEDULER_STATS_KEYS /
+        SCHEDULER_TENANT_KEYS), ``cache`` (hit/miss/evict/stale
+        counters + byte budget — CACHE_STATS_KEYS), and
+        ``collections`` (the multi-tenant view —
+        COLLECTION_MANAGER_KEYS / COLLECTION_STATS_KEYS per tenant;
+        empty manager when only the default corpus is in use).
 
         ``compaction_ticks`` counts only ticks that ran work;
         ``idle_ticks`` the no-ops.  In async mode a ``driver`` sub-dict
@@ -547,7 +729,8 @@ class RetrievalService:
                "idle_ticks": self._idle_ticks,
                "index_size": self.index.n if self.index else 0,
                "scheduler": self.scheduler.stats(),
-               "cache": self.cache.stats()}
+               "cache": self.cache.stats(),
+               "collections": self.collections.stats()}
         if self.index is not None:
             out.update(self.index.index_stats())
         if self.driver is not None:

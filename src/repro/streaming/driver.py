@@ -59,6 +59,18 @@ For the sharded index one worker stages all shards' chunks of the
 active merge: a sharded level swap is a single cross-shard atomic
 operation, so per-shard swap serialization on the control thread falls
 out of the same ``drain()``.
+
+Multi-tenant serving (docs/serving.md "Collections"): ONE driver —
+one worker thread, one lock — owns every collection's index.
+``attach(name, index)`` / ``detach(name)`` manage the pool; the
+worker round-robins over the attached indexes that have pending merge
+work, servicing ONE bounded op (a staging gather or a pre-build) per
+index per turn, so a churn-heavy tenant cannot monopolize the worker
+while another tenant's merge starves.  Per-collection worker-op
+counts are reported as ``stats()["fairness"]``.  ``drain``/``flush``
+sweep all attached indexes.  The single-index constructor form
+(``CompactionDriver(index)``) attaches it under the reserved default
+name ``""`` — bit-identical to the pre-collections behavior.
 """
 from __future__ import annotations
 
@@ -87,10 +99,16 @@ class CompactionDriver:
     ``flush()`` at checkpoints → ``stop(flush=True)`` at shutdown.
     """
 
-    def __init__(self, index, *, budget_rows: Optional[int] = None,
+    def __init__(self, index=None, *, budget_rows: Optional[int] = None,
                  poll_s: float = 0.02, name: str = "compaction-driver",
                  obs=None):
-        self.index = index
+        # name -> index; insertion-ordered, which the round-robin
+        # cursor walks.  "" is the default (single-tenant) slot.
+        self._indexes: "Dict[str, object]" = {}
+        if index is not None:
+            self._indexes[""] = index
+        self._rr = 0                # round-robin cursor over attachments
+        self._fairness: Dict[str, int] = {}  # name -> worker ops run
         self.budget_rows = budget_rows
         self.poll_s = float(poll_s)
         self.name = name
@@ -115,6 +133,43 @@ class CompactionDriver:
         self._applied = 0           # merges swapped in via drain/flush
         self._flushes = 0
         self._errors: List[str] = []
+
+    # ----------------------------------------------------------- index pool
+    @property
+    def index(self):
+        """The default (single-tenant) index, else the first attached —
+        the pre-collections single-index view.  None when empty."""
+        if "" in self._indexes:
+            return self._indexes[""]
+        return next(iter(self._indexes.values()), None)
+
+    def indexes(self) -> Dict[str, object]:
+        """Snapshot of the attached pool (name -> index)."""
+        with self._mu:
+            return dict(self._indexes)
+
+    def attach(self, name: str, index) -> None:
+        """CONTROL-THREAD ONLY: add (or replace) a collection's index
+        in the pool.  The lock excludes the worker, so the new index is
+        visible to its next round-robin turn."""
+        with self._mu:
+            self._indexes[str(name)] = index
+        self.obs.events.emit("driver_attach", name=self.name,
+                             collection=str(name))
+        self._wake.set()
+
+    def detach(self, name: str):
+        """CONTROL-THREAD ONLY: remove a collection's index from the
+        pool (idempotent).  Under the lock the worker is never
+        mid-stage on it; any staged-but-unapplied work is simply
+        abandoned with the index (staging is volatile by contract).
+        Returns the detached index, or None."""
+        with self._mu:
+            idx = self._indexes.pop(str(name), None)
+        if idx is not None:
+            self.obs.events.emit("driver_detach", name=self.name,
+                                 collection=str(name))
+        return idx
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -171,8 +226,9 @@ class CompactionDriver:
         self._drains += 1
         applied = 0
         with self._mu:
-            while self.index.apply_staged():
-                applied += 1
+            for idx in self._indexes.values():
+                while idx.apply_staged():
+                    applied += 1
         if applied:
             self._applied += applied
             self._wake.set()          # the worker can stage the next merge
@@ -190,11 +246,12 @@ class CompactionDriver:
         self._flushes += 1
         applied = 0
         with self._mu:
-            while self.index.has_compaction_work:
-                if self.index.apply_staged():
-                    applied += 1
-                else:
-                    self.index.stage_step(1 << 30)   # stage the remainder
+            for idx in self._indexes.values():
+                while idx.has_compaction_work:
+                    if idx.apply_staged():
+                        applied += 1
+                    else:
+                        idx.stage_step(1 << 30)   # stage the remainder
         if applied:
             self._applied += applied
         self.obs.events.emit("flush_barrier", name=self.name,
@@ -202,33 +259,48 @@ class CompactionDriver:
         return applied
 
     # ------------------------------------------------------------- worker
+    def _service_one(self, name: str, idx) -> bool:
+        """One bounded worker op on one index (under the lock): a
+        pre-build when its head is staged-ready, else a staging
+        gather.  Returns True when work ran."""
+        if idx.staged_ready:
+            # pre-build the merged segment so the control thread's
+            # swap is re-check + rewire only.  Once prepared (or on
+            # the sharded index, which never pre-builds), the head
+            # just waits on a drain — re-polling would spin on the
+            # lock.
+            if idx.prepare_staged():
+                self._prepares += 1
+                self._fairness[name] = self._fairness.get(name, 0) + 1
+                return True
+            return False
+        status = idx.stage_step(self.budget_rows)
+        if status == "ready":
+            self.obs.events.emit("stage_ready", collection=name,
+                                 staged_rows=int(idx.staged_rows))
+        if status != "idle":
+            self._stage_calls += 1
+            self._fairness[name] = self._fairness.get(name, 0) + 1
+            return True
+        return False
+
     def _run(self) -> None:
         while not self._stop.is_set():
             did_work = False
             try:
                 with self._mu:
-                    if self.index.staged_ready:
-                        # pre-build the merged segment so the control
-                        # thread's swap is re-check + rewire only.
-                        # did_work keeps the loop hot, so this runs on
-                        # the iteration right after the final gather —
-                        # no poll wait in which a drain could beat it
-                        # to an inline build.  Once prepared (or on the
-                        # sharded index, which never pre-builds), the
-                        # head just waits on a drain — re-polling would
-                        # spin on the lock.
-                        if self.index.prepare_staged():
-                            self._prepares += 1
+                    # round-robin: start one past the last serviced
+                    # collection, take ONE bounded op from the first
+                    # that has work — a churny tenant advances one op
+                    # per turn, not until done.
+                    names = list(self._indexes)
+                    n = len(names)
+                    for k in range(n):
+                        i = (self._rr + 1 + k) % n
+                        if self._service_one(names[i], self._indexes[names[i]]):
+                            self._rr = i
                             did_work = True
-                    else:
-                        status = self.index.stage_step(self.budget_rows)
-                        if status != "idle":
-                            self._stage_calls += 1
-                            did_work = True
-                        if status == "ready":
-                            self.obs.events.emit(
-                                "stage_ready",
-                                staged_rows=int(self.index.staged_rows))
+                            break
             except Exception as e:    # control reset state mid-stage
                 # (compact()/restore without stop(): defensive — abandon
                 # the gather, the re-derived schedule restages)
@@ -251,13 +323,29 @@ class CompactionDriver:
         ``flushes`` (control-thread side), and ``worker_errors``.
         ``work_seconds`` is the index's per-phase compaction-work
         accumulator — the same dict ``index_stats()`` reports, never a
-        second measurement.
+        second measurement.  With multiple attached collections the
+        index-derived fields aggregate over the pool
+        (``pending_gathers``/``staged_rows`` sum; ``staged_ready`` =
+        any; ``work_seconds`` sums per phase), ``collections`` counts
+        attachments, and ``fairness`` maps each collection to the
+        worker ops (gathers + pre-builds) it has received — the
+        round-robin audit trail.
         """
+        with self._mu:
+            indexes = dict(self._indexes)
+        pending = sum(int(i.pending_merges) for i in indexes.values())
+        staged = sum(int(i.staged_rows) for i in indexes.values())
+        ready = any(bool(i.staged_ready) for i in indexes.values())
+        work: Dict[str, float] = {}
+        for i in indexes.values():
+            for phase, secs in dict(
+                    getattr(i, "compaction_work_seconds", None) or {}).items():
+                work[phase] = work.get(phase, 0.0) + secs
         return {
             "worker_alive": self.running,
-            "pending_gathers": int(self.index.pending_merges),
-            "staged_rows": int(self.index.staged_rows),
-            "staged_ready": bool(self.index.staged_ready),
+            "pending_gathers": pending,
+            "staged_rows": staged,
+            "staged_ready": ready,
             "budget_rows": self.budget_rows,
             "stage_calls": self._stage_calls,
             "prepares": self._prepares,
@@ -265,11 +353,15 @@ class CompactionDriver:
             "applied": self._applied,
             "flushes": self._flushes,
             "worker_errors": len(self._errors),
-            "work_seconds": dict(
-                getattr(self.index, "compaction_work_seconds", None) or {}),
+            "collections": len(indexes),
+            "fairness": dict(self._fairness),
+            "work_seconds": work,
         }
 
     def __repr__(self) -> str:
+        pending = sum(int(i.pending_merges)
+                      for i in self._indexes.values())
         return (f"CompactionDriver({self.name!r}, "
                 f"alive={self.running}, "
-                f"pending={self.index.pending_merges})")
+                f"collections={len(self._indexes)}, "
+                f"pending={pending})")

@@ -78,7 +78,8 @@ class DynamicHybridIndex:
                  cost_model: CostModel = CostModel(alpha=1.0, beta=10.0),
                  policy: CompactionPolicy = CompactionPolicy(),
                  key: jax.Array | int = 0, impl: Optional[str] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 engine: Optional[QueryEngine] = None):
         """Args:
           family: LSH family (``make_family``); owns metric + hashes.
           num_buckets: buckets per table B.
@@ -91,6 +92,9 @@ class DynamicHybridIndex:
           impl: kernel impl override (e.g. ``"pallas_interpret"``).
           obs: observability bundle (tracer + event log + registry);
             default is a fresh disabled bundle — no cost unless asked.
+          engine: a shared ``QueryEngine`` (multi-tenant collections
+            pass one so every tenant routes through the same engine +
+            tracer); default builds a private one from ``cost_model``.
         """
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
@@ -107,8 +111,10 @@ class DynamicHybridIndex:
         # Index-owned so the numbers survive stack resets
         # (build/compact/load_state_dict replace the SegmentStack).
         self.phases = WorkPhases("stage", "build", "apply", "full")
-        self._engine = QueryEngine(cost_model, impl=impl,
-                                   tracer=self.obs.tracer)
+        self._engine = engine if engine is not None else QueryEngine(
+            cost_model, impl=impl, tracer=self.obs.tracer)
+        # shared across collections: bucket_fn_for is lru-cached on the
+        # (hashable) family, so equal families reuse one jitted hash
         self._bucket_fn = bucket_fn_for(self.family, self.num_buckets)
 
         self.stack = SegmentStack(phases=self.phases)

@@ -181,7 +181,8 @@ class ShardedDynamicHybridIndex:
                  routing: str = "per_shard", max_out: int = 512,
                  data_axis: str = "data", key: jax.Array | int = 0,
                  impl: Optional[str] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 engine: Optional[QueryEngine] = None):
         """Args:
           family: LSH family (``make_family``); owns metric + hashes.
           num_buckets: buckets per table B; rows hash into [0, B), pad
@@ -205,6 +206,9 @@ class ShardedDynamicHybridIndex:
           obs: observability bundle — events + work phases only here;
             per-query tracing needs the host-side single-index path
             (routing runs inside ``shard_map`` on this index).
+          engine: a shared ``QueryEngine`` (multi-tenant collections
+            pass one); default builds a private one from
+            ``cost_model``.
         """
         assert routing in ("global", "per_shard"), routing
         if isinstance(key, int):
@@ -224,7 +228,8 @@ class ShardedDynamicHybridIndex:
         self.data_axis = data_axis
         self.shards = int(mesh.shape[data_axis])
         self.impl = impl
-        self._engine = QueryEngine(cost_model, impl=impl)
+        self._engine = engine if engine is not None else QueryEngine(
+            cost_model, impl=impl)
         self._shard = NamedSharding(mesh, P(data_axis))
         self.stats = CompactionStats()
         self.obs = obs if obs is not None else Observability.disabled()

@@ -1,0 +1,262 @@
+"""Reusable differential-test harness for multi-tenant serving.
+
+Three pieces, shared by ``test_collections.py`` and
+``test_cache_churn.py``:
+
+  * ``decode_ops`` — a deterministic decoder from raw integer streams
+    (the hypothesis strategy surface the shim supports) into *valid*
+    multi-collection op streams: create / insert / delete / query /
+    compact / drop over a fixed name alphabet.  Validity is enforced by
+    rewriting, never by skipping, so every input int produces exactly
+    one op and equal int streams produce equal op streams — the
+    property the mirror construction depends on.
+  * ``MirrorOracle`` — runs one op stream simultaneously against a
+    multi-tenant ``RetrievalService`` and N independent single-tenant
+    mirror services (one per collection name, each hosting its one
+    collection through the SAME ``create_collection`` code path), and
+    asserts after every op that each collection's documents, and on
+    every query its reported (ids, dists), are bit-identical to its
+    mirror's.  Any cross-tenant bleed — shared-state corruption, cache
+    aliasing, mis-routed compaction — shows up as a divergence.
+  * ``assert_reported_identical`` — reported-set comparison: per query,
+    identical id sets and bitwise-equal distances.  ``strict_order``
+    additionally pins the reporting order; the default sorts by id,
+    because segment-structure timing (budgeted tick interleave, async
+    staging pace) can permute candidate order while the reported SET
+    is the invariant the paper's Algorithm 2 guarantees.
+
+Comparison points are always quiesced: pending merge state legitimately
+diverges between a multi-tenant service (whose tick round-robins ONE
+pending collection per turn) and a solo mirror — but fully-drained
+states must coincide, and candidate generation is segmentation-
+invariant once they do.
+"""
+import numpy as np
+
+OPS = ("create", "insert", "delete", "query", "compact", "drop")
+
+
+def decode_ops(ints, names=("a", "b", "c")):
+    """Decode a raw integer stream into a valid op stream.
+
+    Returns ``[(kind, name, arg), ...]`` with one op per input int.
+    Invalid draws are rewritten deterministically (create on a live
+    name -> insert; insert/delete/query/drop on a dead name -> create),
+    tracking liveness inside the decoder, so the result replays against
+    any conforming service without errors.  ``compact`` is global (its
+    name operand is ignored by appliers).
+    """
+    names = tuple(names)
+    live = set()
+    ops = []
+    for v in ints:
+        v = int(v) & 0x7FFFFFFF
+        kind = OPS[v % len(OPS)]
+        name = names[(v // len(OPS)) % len(names)]
+        arg = v // (len(OPS) * len(names))
+        if kind == "create":
+            if name in live:
+                kind = "insert"
+        elif kind == "drop":
+            if name not in live:
+                kind = "create"
+        elif kind in ("insert", "delete", "query"):
+            if name not in live:
+                kind = "create"
+        if kind == "create":
+            live.add(name)
+        elif kind == "drop":
+            live.discard(name)
+        ops.append((kind, name, arg))
+    return ops
+
+
+def replay_liveness(ops):
+    """The liveness trace a valid op stream implies: ``[(op, live_set),
+    ...]`` with the live set AFTER each op.  Raises AssertionError on
+    any op illegal in its prefix state — the validity oracle for
+    ``decode_ops``."""
+    live = set()
+    trace = []
+    for kind, name, arg in ops:
+        if kind == "create":
+            assert name not in live, (kind, name)
+            live.add(name)
+        elif kind == "drop":
+            assert name in live, (kind, name)
+            live.remove(name)
+        elif kind in ("insert", "delete", "query"):
+            assert name in live, (kind, name)
+        else:
+            assert kind == "compact", kind
+        trace.append(((kind, name, arg), frozenset(live)))
+    return trace
+
+
+def assert_reported_identical(res_a, res_b, strict_order=False):
+    """Both results report the same neighbors for every query.
+
+    Identical id sets with bitwise-equal distances; ``strict_order``
+    additionally requires the same reporting order.
+    """
+    assert res_a.n_queries == res_b.n_queries, \
+        (res_a.n_queries, res_b.n_queries)
+    for i in range(res_a.n_queries):
+        ids_a, dists_a = (np.asarray(x) for x in res_a.reported(i))
+        ids_b, dists_b = (np.asarray(x) for x in res_b.reported(i))
+        if not strict_order:
+            oa, ob = np.argsort(ids_a), np.argsort(ids_b)
+            ids_a, dists_a = ids_a[oa], dists_a[oa]
+            ids_b, dists_b = ids_b[ob], dists_b[ob]
+        np.testing.assert_array_equal(ids_a, ids_b,
+                                      err_msg=f"query {i}: ids differ")
+        np.testing.assert_array_equal(dists_a, dists_b,
+                                      err_msg=f"query {i}: dists differ")
+
+
+def quiesce(svc):
+    """Drain ALL pending merge work so the service's per-collection
+    stacks are in their deterministic fully-compacted state (async: the
+    driver flush barrier; sync/budgeted: tick to completion)."""
+    if getattr(svc, "driver", None) is not None:
+        svc.driver.flush()
+    ticks = 0
+    while svc.compaction_tick():
+        ticks += 1
+        assert ticks < 10_000, "compaction_tick never drained"
+
+
+class MirrorOracle:
+    """One multi-tenant service vs N single-tenant mirrors.
+
+    Args:
+      make_service: zero-arg factory for a fresh ``RetrievalService``
+        (all services — the multi-tenant one and every mirror — come
+        from the same factory, so config and params are identical).
+      names: the collection-name alphabet; one mirror service per name.
+      insert_fn: ``(name, arg) -> token batch`` for insert ops —
+        must be deterministic in (name, arg) so both sides embed the
+        same documents.
+      query_fn: ``(arg) -> token batch`` for query ops.
+    """
+
+    def __init__(self, make_service, names, insert_fn, query_fn):
+        self.svc = make_service()
+        self.mirrors = {n: make_service() for n in names}
+        self.names = tuple(names)
+        self.insert_fn = insert_fn
+        self.query_fn = query_fn
+        self.live_ids = {n: [] for n in names}
+        self.ops_applied = 0
+        self.queries_checked = 0
+
+    # ------------------------------------------------------------ applying
+    def _pair(self, name):
+        return self.svc, self.mirrors[name]
+
+    def apply(self, op):
+        """Apply one decoded op to the multi-tenant service AND the
+        op's mirror, asserting equivalence of every observable."""
+        kind, name, arg = op
+        if kind == "create":
+            self.svc.create_collection(name)
+            self.mirrors[name].create_collection(name)
+            self.live_ids[name] = []
+        elif kind == "drop":
+            self.svc.drop_collection(name)
+            self.mirrors[name].drop_collection(name)
+            self.live_ids[name] = []
+        elif kind == "insert":
+            batch = self.insert_fn(name, arg)
+            ids_m = self.svc.add_documents([batch], collection=name)
+            ids_s = self.mirrors[name].add_documents([batch],
+                                                     collection=name)
+            np.testing.assert_array_equal(ids_m, ids_s)
+            self.live_ids[name].extend(int(i) for i in ids_m)
+        elif kind == "delete":
+            ids = self.live_ids[name]
+            if ids:
+                k = 1 + arg % max(1, len(ids) // 4)
+                off = arg % len(ids)
+                victims = [ids[(off + j) % len(ids)] for j in range(k)]
+                victims = sorted(set(victims))
+                n_m = self.svc.remove_documents(victims, collection=name)
+                n_s = self.mirrors[name].remove_documents(victims,
+                                                          collection=name)
+                assert n_m == n_s == len(victims), (n_m, n_s, victims)
+                self.live_ids[name] = [i for i in ids
+                                       if i not in set(victims)]
+        elif kind == "query":
+            self.check_query(name, arg)
+        elif kind == "compact":
+            quiesce(self.svc)
+            for m in self.mirrors.values():
+                quiesce(m)
+        else:  # pragma: no cover
+            raise ValueError(op)
+        self.ops_applied += 1
+        self.assert_isolated()
+
+    def run(self, ops):
+        for op in ops:
+            self.apply(op)
+        # final sweep: every live collection answers identically
+        for name in self.names:
+            if name in self.svc.collections:
+                self.check_query(name, arg=0)
+
+    # ------------------------------------------------------------ checking
+    def check_query(self, name, arg):
+        """Quiesced direct-query comparison for one collection."""
+        svc, mirror = self._pair(name)
+        quiesce(svc)
+        quiesce(mirror)
+        qb = self.query_fn(arg)
+        res_m, _ = svc.query(qb, collection=name)
+        res_s, _ = mirror.query(qb, collection=name)
+        assert_reported_identical(res_m, res_s)
+        self.queries_checked += 1
+
+    def assert_isolated(self):
+        """Structural isolation: the multi-tenant service hosts exactly
+        the live collections, each with its mirror's live-doc count and
+        version-relevant corpus size."""
+        for name in self.names:
+            in_multi = name in self.svc.collections
+            in_mirror = name in self.mirrors[name].collections
+            assert in_multi == in_mirror, (name, in_multi, in_mirror)
+            if in_multi:
+                n_m = int(self.svc.collections.get(name).index.n)
+                n_s = int(self.mirrors[name].collections.get(name).index.n)
+                assert n_m == n_s == len(self.live_ids[name]), \
+                    (name, n_m, n_s, len(self.live_ids[name]))
+
+    def check_submit_round(self, arg=0):
+        """The coalesced submit/drain path reports the same thing the
+        mirrors' does, per collection, in one interleaved round."""
+        live = [n for n in self.names if n in self.svc.collections]
+        if not live:
+            return
+        quiesce(self.svc)
+        qb = self.query_fn(arg)
+        uids = {n: self.svc.submit(qb, collection=n) for n in live}
+        res = self.svc.drain_batches(force=True)
+        for n in live:
+            mirror = self.mirrors[n]
+            quiesce(mirror)
+            direct, _ = mirror.query(qb, collection=n)
+            r = res[uids[n]]
+            for i in range(r.n_queries):
+                ids_d, dists_d = (np.asarray(x) for x in direct.reported(i))
+                order_m = np.argsort(np.asarray(r.ids[i]))
+                order_d = np.argsort(ids_d)
+                np.testing.assert_array_equal(
+                    np.asarray(r.ids[i])[order_m], ids_d[order_d])
+                np.testing.assert_array_equal(
+                    np.asarray(r.dists[i])[order_m], dists_d[order_d])
+        self.queries_checked += len(live)
+
+    def close(self):
+        self.svc.shutdown()
+        for m in self.mirrors.values():
+            m.shutdown()

@@ -10,6 +10,12 @@ is impossible by construction — these tests prove the construction:
     budgeted, and async compaction modes), the cached service's
     reported (ids, dists) stay bit-identical to an uncached service at
     every drained state.
+
+The hand-written interleavings below are the named regression cases;
+``test_cache_churn_property_stream`` drives the same cached-vs-plain
+twin through *generated* op streams (the shared ``harness.decode_ops``
+strategy the multi-tenant differential tests use), so the churn
+coverage is no longer limited to the sequences someone thought of.
 """
 import dataclasses
 
@@ -18,6 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+from harness import decode_ops, quiesce
 from repro.configs import get_config, reduced_config
 from repro.core import CostModel
 from repro.core.lsh import make_family
@@ -245,3 +257,81 @@ def test_cache_churn_async_driver():
     check_round()
     assert svc.stats["cache"]["hits"] >= 16
     svc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# generated churn: the shared op-stream strategy drives the twins
+# --------------------------------------------------------------------------
+_PROP_NAMES = ("p", "q")
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=6, max_size=14))
+def test_cache_churn_property_stream(ints):
+    """Generated multi-collection op streams (create / insert / delete /
+    query / compact / drop) keep a cached service bit-identical to its
+    uncached twin at every query point — the named cases above, minus
+    the hand-picked sequences."""
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cached = _service(cfg, params, compact_step_rows=32)
+    plain = _service(cfg, params, result_cache_bytes=0,
+                     compact_step_rows=32)
+    twins = (cached, plain)
+    live_ids = {n: [] for n in _PROP_NAMES}
+
+    def batch_for(name, arg):
+        b = lm_batch(50 + _PROP_NAMES.index(name), arg % 5, batch=16,
+                     seq=12, vocab=cfg.vocab, cfg=cfg)
+        b.pop("labels")
+        return b
+
+    qtok = np.asarray(batch_for("p", 0)["tokens"])[:4]
+
+    def check_query(name):
+        for svc in twins:
+            quiesce(svc)
+        uids = [[svc.submit(qtok[i], collection=name) for i in range(4)]
+                for svc in twins]
+        res = [svc.drain_batches(force=True) for svc in twins]
+        _assert_identical(res[0], res[1], uids[0], uids[1])
+        # repeats on the unchanged state: the cached twin hits, stays
+        # identical to the plain twin's recompute
+        uid2 = [[svc.submit(qtok[i], collection=name) for i in range(4)]
+                for svc in twins]
+        res2 = [svc.drain_batches(force=True) for svc in twins]
+        assert all(res2[0][u].cached for u in uid2[0])
+        assert not any(res2[1][u].cached for u in uid2[1])
+        _assert_identical(res2[0], res2[1], uid2[0], uid2[1])
+
+    for kind, name, arg in decode_ops(ints, names=_PROP_NAMES):
+        if kind == "create":
+            for svc in twins:
+                svc.create_collection(name)
+            live_ids[name] = []
+        elif kind == "drop":
+            for svc in twins:
+                svc.drop_collection(name)
+            live_ids[name] = []
+        elif kind == "insert":
+            got = [svc.add_documents([batch_for(name, arg)],
+                                     collection=name) for svc in twins]
+            np.testing.assert_array_equal(got[0], got[1])
+            live_ids[name].extend(int(i) for i in got[0])
+        elif kind == "delete":
+            ids = live_ids[name]
+            if ids:
+                victims = sorted({ids[(arg + j) % len(ids)]
+                                  for j in range(1 + arg % 4)})
+                counts = {svc.remove_documents(victims, collection=name)
+                          for svc in twins}
+                assert counts == {len(victims)}
+                live_ids[name] = [i for i in ids if i not in set(victims)]
+        elif kind == "query":
+            check_query(name)
+        elif kind == "compact":
+            for svc in twins:
+                quiesce(svc)
+    for name in _PROP_NAMES:
+        if name in cached.collections:
+            check_query(name)

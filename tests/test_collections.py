@@ -1,0 +1,514 @@
+"""Multi-tenant collections: isolation, quotas, fairness, schemas.
+
+The centerpiece is the differential harness (``harness.MirrorOracle``):
+one multi-tenant service and N independent single-tenant mirrors run
+the SAME decoded op stream, and every collection's reported sets must
+stay bit-identical to its mirror's under interleaved add / remove /
+compaction churn — in all three compaction modes.  Around it:
+property tests for the op-stream decoder, scheduler quota/fairness
+units with an injected clock, pinned stats schemas, driver fairness,
+and checkpoint round-trips of the full collection tree.
+"""
+import dataclasses
+import math
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_shim import given, settings, strategies as st
+
+from harness import (MirrorOracle, assert_reported_identical, decode_ops,
+                     quiesce, replay_liveness)
+from repro.configs import get_config, reduced_config
+from repro.core import CostModel
+from repro.core.lsh import make_family
+from repro.data import lm_batch
+from repro.models import init_params
+from repro.models.parallel import ParallelConfig
+from repro.obs import Observability
+from repro.obs.schema import (COLLECTION_MANAGER_KEYS,
+                              COLLECTION_STATS_KEYS, DRIVER_STATS_KEYS,
+                              SCHEDULER_STATS_KEYS, SCHEDULER_TENANT_KEYS)
+from repro.serve import (RetrievalConfig, RetrievalService, ResultCache,
+                         ShapeBucketScheduler, TenantQuota)
+from repro.serve.collections import CollectionManager
+from repro.streaming import (CompactionDriver, CompactionPolicy,
+                             DynamicHybridIndex)
+
+PAR = ParallelConfig(mesh=None, attn_chunk_q=8, attn_chunk_k=8,
+                     logits_chunk=8, remat="none")
+NAMES = ("a", "b", "c")
+
+
+# --------------------------------------------------------------------------
+# op-stream decoder properties
+# --------------------------------------------------------------------------
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=0, max_size=40))
+def test_decode_ops_always_valid(ints):
+    """Every int stream decodes to a stream replayable without errors:
+    creates only on dead names, drops/inserts/deletes/queries only on
+    live ones (replay_liveness raises otherwise)."""
+    ops = decode_ops(ints, names=NAMES)
+    assert len(ops) == len(ints)            # rewritten, never skipped
+    trace = replay_liveness(ops)
+    assert len(trace) == len(ops)
+    for (kind, name, arg), live in trace:
+        assert kind in ("create", "insert", "delete", "query",
+                        "compact", "drop")
+        assert name in NAMES
+        assert arg >= 0
+        assert live <= set(NAMES)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=0, max_size=40))
+def test_decode_ops_deterministic(ints):
+    """Equal int streams decode to equal op streams — the property the
+    mirror construction (two services fed one stream) relies on."""
+    assert decode_ops(ints, names=NAMES) == decode_ops(ints, names=NAMES)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+def test_decode_ops_prefix_stable(ints, extra):
+    """Appending input never rewrites the decoded prefix (the decoder
+    is causal), so streams can be extended mid-run."""
+    ops = decode_ops(ints, names=NAMES)
+    assert decode_ops(ints + [extra], names=NAMES)[:len(ints)] == ops
+
+
+def test_decode_ops_exercises_all_kinds():
+    """The rewrite rules keep every op kind reachable."""
+    ops = decode_ops(range(0, 600, 7), names=NAMES)
+    assert {k for k, _, _ in ops} == {"create", "insert", "delete",
+                                      "query", "compact", "drop"}
+
+
+# --------------------------------------------------------------------------
+# scheduler: per-tenant token buckets + weighted-fair drain (no LM)
+# --------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_tenant_quota_rejects_at_own_bucket():
+    """A flooding tenant empties ITS bucket and gets rejected there,
+    while the quiet tenant keeps being admitted; refill restores
+    admission; the labeled reject counter carries the collection."""
+    from repro.obs import MetricsRegistry
+    clock = FakeClock()
+    reg = MetricsRegistry(enabled=True)
+    sched = ShapeBucketScheduler(max_batch=8, registry=reg, clock=clock)
+    sched.set_quota("noisy", rate=2.0, burst=3.0)
+    admitted = sum(sched.submit({"i": i}, collection="noisy") is not None
+                   for i in range(10))
+    assert admitted == 3                     # burst exhausted
+    assert sched.submit({"i": 0}, collection="quiet") is not None
+    ts = sched.stats()["tenants"]
+    assert ts["noisy"]["rejects"] == 7 and ts["noisy"]["submits"] == 3
+    assert ts["quiet"]["rejects"] == 0 and ts["quiet"]["submits"] == 1
+    snap = reg.snapshot()["counters"]
+    assert snap['repro_scheduler_rejects_total'
+                '{collection="noisy",reason="quota"}'] == 7
+    clock.t += 1.0                           # refill 2 tokens
+    assert sched.submit({"i": 0}, collection="noisy") is not None
+    assert sched.submit({"i": 1}, collection="noisy") is not None
+    assert sched.submit({"i": 2}, collection="noisy") is None
+
+
+def test_global_queue_bound_labeled_per_tenant():
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry(enabled=True)
+    sched = ShapeBucketScheduler(max_batch=4, max_queue=2, registry=reg,
+                                 clock=FakeClock())
+    assert sched.submit({}, collection="a") is not None
+    assert sched.submit({}, collection="b") is not None
+    assert sched.submit({}, collection="a") is None       # queue full
+    snap = reg.snapshot()["counters"]
+    assert snap['repro_scheduler_rejects_total'
+                '{collection="a",reason="queue_full"}'] == 1
+    assert snap["repro_scheduler_rejects_total"] == 1     # aggregate
+
+
+def test_weighted_fair_drain_shares_and_order():
+    """Backlogged tenants split batch slots by quota weight; the popped
+    batch preserves global submit (uid) order; a lone tenant drains
+    pure FIFO."""
+    clock = FakeClock()
+    sched = ShapeBucketScheduler(max_batch=8, clock=clock)
+    sched.set_quota("big", weight=3.0)
+    sched.set_quota("small", weight=1.0)
+    uids = {}
+    for i in range(12):                      # interleave submits
+        uids[("big", i)] = sched.submit({"i": i}, collection="big")
+        uids[("small", i)] = sched.submit({"i": i}, collection="small")
+    take, padded = sched.next_batch()
+    assert padded == 8 and len(take) == 8
+    by_col = {}
+    for r in take:
+        by_col.setdefault(r.collection, []).append(r)
+    assert len(by_col["big"]) == 6 and len(by_col["small"]) == 2
+    assert [r.uid for r in take] == sorted(r.uid for r in take)
+    # each tenant's share is its own FIFO head
+    assert [r.payload["i"] for r in by_col["big"]] == [0, 1, 2, 3, 4, 5]
+    assert [r.payload["i"] for r in by_col["small"]] == [0, 1]
+
+
+def test_weighted_drain_never_starves_quiet_tenant():
+    """A 100-deep noisy backlog cannot push a quiet tenant's request
+    out of the next batch — its queue-wait stays one drain, not a
+    whole backlog flush."""
+    clock = FakeClock()
+    sched = ShapeBucketScheduler(max_batch=8, clock=clock)
+    sched.set_quota("noisy", weight=1.0)
+    sched.set_quota("quiet", weight=1.0)
+    for i in range(100):
+        sched.submit({"i": i}, collection="noisy")
+    clock.t = 5.0
+    quiet_uid = sched.submit({"i": -1}, collection="quiet")
+    clock.t = 6.0
+    take, _ = sched.next_batch()
+    assert quiet_uid in {r.uid for r in take}
+    ts = sched.stats()["tenants"]
+    assert ts["quiet"]["queue_wait_max_s"] == 1.0
+    assert ts["noisy"]["queue_wait_max_s"] == 6.0
+
+
+def test_drop_collection_discards_queue_and_state():
+    sched = ShapeBucketScheduler(max_batch=4, clock=FakeClock())
+    for i in range(3):
+        sched.submit({}, collection="x")
+    sched.submit({}, collection="y")
+    assert sched.drop_collection("x") == 3
+    assert sched.stats()["queue_depth"] == 1
+    assert "x" not in sched.stats()["tenants"]
+    take, _ = sched.next_batch()
+    assert [r.collection for r in take] == ["y"]
+
+
+def test_scheduler_tenant_stats_schema_pinned():
+    sched = ShapeBucketScheduler(max_batch=4, clock=FakeClock())
+    sched.set_quota("t", rate=5.0, weight=2.0)
+    sched.submit({}, collection="t")
+    s = sched.stats()
+    assert set(s) == SCHEDULER_STATS_KEYS
+    assert set(s["tenants"]) == {"t"}
+    assert set(s["tenants"]["t"]) == SCHEDULER_TENANT_KEYS
+    assert s["tenants"]["t"]["burst"] == 5.0        # burst defaults rate
+    assert s["tenants"]["t"]["weight"] == 2.0
+
+
+# --------------------------------------------------------------------------
+# collection manager over bare indexes (no LM)
+# --------------------------------------------------------------------------
+def _bare_factory(d=8, delta_capacity=16, step_rows=None):
+    fam = make_family("l2", d=d, L=4, r=1.0)
+
+    def factory(obs):
+        return DynamicHybridIndex(
+            fam, num_buckets=64, m=32, cap=32,
+            delta_capacity=delta_capacity,
+            cost_model=CostModel(alpha=1.0, beta=1.0),
+            policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                    fanout=2, step_rows=step_rows),
+            key=0, obs=obs)
+    return factory
+
+
+def test_manager_lifecycle_names_and_events():
+    obs = Observability.create(enabled=True)
+    mgr = CollectionManager(_bare_factory(), obs=obs)
+    for bad in ("", "a/b", ".hidden", "sp ace", "-lead"):
+        with pytest.raises(ValueError):
+            mgr.create(bad)
+    col = mgr.create("t1", quota=TenantQuota(rate=9.0, burst=9.0))
+    with pytest.raises(ValueError):
+        mgr.create("t1")                      # duplicate
+    assert "t1" in mgr and len(mgr) == 1 and mgr.names() == ["t1"]
+    with pytest.raises(KeyError):
+        mgr.get("missing")
+    # index events are stamped with the collection name (delta
+    # overflow forces at least one freeze event through the facade)
+    rng = np.random.default_rng(0)
+    col.index.build(rng.normal(size=(8, 8)).astype(np.float32))
+    col.index.insert(rng.normal(size=(16, 8)).astype(np.float32))
+    col.index.insert(rng.normal(size=(16, 8)).astype(np.float32))
+    kinds = {}
+    for ev in obs.events.events():
+        if ev.get("collection") == "t1":
+            kinds[ev["kind"]] = kinds.get(ev["kind"], 0) + 1
+    assert "collection_create" in kinds
+    assert len(kinds) > 1                     # index events labeled too
+    dropped = mgr.drop("t1")
+    assert dropped is col and len(mgr) == 0
+    assert any(ev["kind"] == "collection_drop"
+               for ev in obs.events.events())
+    # the name is reusable after a drop
+    mgr.create("t1")
+
+
+def test_manager_stats_schema_pinned():
+    mgr = CollectionManager(_bare_factory())
+    mgr.create("u")
+    mgr.create("v", quota=TenantQuota(rate=4.0, burst=2.0, weight=3.0))
+    mgr.get("u").index.build(np.random.default_rng(1)
+                             .normal(size=(12, 8)).astype(np.float32))
+    mgr.note_query("u", n_queries=5, n_linear=2)
+    s = mgr.stats()
+    assert set(s) == COLLECTION_MANAGER_KEYS
+    assert s["n_collections"] == 2
+    assert set(s["collections"]) == {"u", "v"}
+    for sub in s["collections"].values():
+        assert set(sub) == COLLECTION_STATS_KEYS
+    assert s["collections"]["u"]["n_live"] == 12
+    assert s["collections"]["u"]["queries"] == 5
+    assert s["collections"]["u"]["linear_served"] == 2
+    assert s["collections"]["v"]["quota_weight"] == 3.0
+    mgr.drop("u")
+    assert mgr.stats()["dropped_total"] == 1
+
+
+def test_manager_drop_purges_cache_and_scheduler():
+    """Dropping a collection removes its queued requests and cache
+    entries — a re-created namesake restarts at version 0 and must
+    never see the old tenant's cached results."""
+    cache = ResultCache(max_bytes=1 << 16)
+    sched = ShapeBucketScheduler(max_batch=4, clock=FakeClock())
+    mgr = CollectionManager(_bare_factory(), scheduler=sched, cache=cache)
+    mgr.create("t")
+    sched.submit({}, collection="t")
+    tok = np.arange(6, dtype=np.int32)[None, :]
+    k = cache.key(0, 0.5, tok, collection="t")
+    cache.put(k, [np.arange(3)], [np.zeros(3, np.float32)])
+    assert cache.get(k) is not None
+    mgr.drop("t")
+    assert cache.get(k) is None
+    assert sched.stats()["queue_depth"] == 0
+    mgr.create("t")                            # fresh version-0 tenant
+    assert cache.get(cache.key(0, 0.5, tok, collection="t")) is None
+
+
+def test_driver_round_robin_fairness_two_collections():
+    """One driver worker serves staged merge work for BOTH attached
+    collections — the fairness counters show neither monopolized the
+    worker, and both stacks drain."""
+    obs = Observability.create(enabled=True)
+    factory = _bare_factory(delta_capacity=16, step_rows=8)
+    driver = CompactionDriver(budget_rows=8, obs=obs, poll_s=0.005)
+    mgr = CollectionManager(factory, obs=obs, driver=driver)
+    rng = np.random.default_rng(2)
+    a = mgr.create("a", attach=False)
+    b = mgr.create("b", attach=False)
+    for col in (a, b):
+        col.index.build(rng.normal(size=(8, 8)).astype(np.float32))
+    mgr.attach_driver("a")
+    mgr.attach_driver("b")
+    driver.start()
+    try:
+        for _ in range(3):                    # overflow both deltas
+            a.index.insert(rng.normal(size=(16, 8)).astype(np.float32))
+            b.index.insert(rng.normal(size=(16, 8)).astype(np.float32))
+            driver.notify()
+        deadline = 200
+        while (a.index.has_compaction_work or
+               b.index.has_compaction_work) and deadline:
+            driver.drain()
+            import time
+            time.sleep(0.01)
+            deadline -= 1
+    finally:
+        driver.stop(flush=True)
+    st = driver.stats()
+    assert set(st) == DRIVER_STATS_KEYS
+    assert st["collections"] == 2
+    assert st["fairness"].get("a", 0) > 0
+    assert st["fairness"].get("b", 0) > 0
+    assert not a.index.has_compaction_work
+    assert not b.index.has_compaction_work
+
+
+# --------------------------------------------------------------------------
+# service-level differential isolation (the tentpole proof)
+# --------------------------------------------------------------------------
+def _make_service_factory(mode, cfg, params):
+    kw = dict(radius=0.5, tables=8, num_buckets=256, hll_m=32, cap=64,
+              delta_capacity=64)
+    if mode == "budgeted":
+        kw["compact_step_rows"] = 32
+    elif mode == "async":
+        kw["async_compaction"] = True
+        kw["compact_step_rows"] = 32
+
+    def make():
+        return RetrievalService(cfg, PAR, params, RetrievalConfig(**kw))
+    return make
+
+
+def _lm_cfg_params():
+    cfg = reduced_config(get_config("yi-6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batch_fns(cfg):
+    def insert_fn(name, arg):
+        seed = 100 + NAMES.index(name)
+        b = lm_batch(seed, arg % 7, batch=16, seq=12, vocab=cfg.vocab,
+                     cfg=cfg)
+        b.pop("labels")
+        return b
+
+    def query_fn(arg):
+        b = lm_batch(4, arg % 3, batch=4, seq=12, vocab=cfg.vocab,
+                     cfg=cfg)
+        b.pop("labels")
+        return b
+    return insert_fn, query_fn
+
+
+# a fixed raw stream; decode_ops rewrites it into a valid mixed-kind
+# stream over a/b/c (creates, inserts, deletes, queries, compacts, one
+# drop+recreate) — the same stream drives all three modes
+_RAW_STREAM = [0, 1, 2, 7, 13, 19, 45, 91, 121, 57, 38, 103, 5, 64,
+               20, 33, 75, 9, 111, 58]
+
+
+@pytest.mark.parametrize("mode", ["sync", "budgeted", "async"])
+def test_differential_isolation_under_churn(mode):
+    """The differential harness: a multi-tenant service and three
+    single-tenant mirrors replay one op stream; per-collection reported
+    sets stay bit-identical under interleaved add / remove / compaction
+    churn, structural isolation holds after every op, and the coalesced
+    submit path agrees too."""
+    cfg, params = _lm_cfg_params()
+    oracle = MirrorOracle(_make_service_factory(mode, cfg, params),
+                          NAMES, *_batch_fns(cfg))
+    try:
+        ops = decode_ops(_RAW_STREAM, names=NAMES)
+        assert {k for k, _, _ in ops} >= {"create", "insert", "query"}
+        oracle.run(ops)
+        oracle.check_submit_round()
+        assert oracle.queries_checked > 0
+    finally:
+        oracle.close()
+
+
+def test_drop_recreate_cache_isolation_service_level():
+    """Bleed-specific regression: tenant 'a' is dropped and re-created
+    with DIFFERENT documents; a repeated query must reflect the new
+    corpus (old cached results purged), while tenant 'b' keeps its
+    cache hits across the neighbor's churn."""
+    cfg, params = _lm_cfg_params()
+    svc = _make_service_factory("sync", cfg, params)()
+    insert_fn, query_fn = _batch_fns(cfg)
+    svc.create_collection("a", [insert_fn("a", 0)])
+    svc.create_collection("b", [insert_fn("b", 0)])
+    qb = query_fn(0)
+
+    u1 = svc.submit(qb, collection="a")
+    ub1 = svc.submit(qb, collection="b")
+    r1 = svc.drain_batches(force=True)
+    u2 = svc.submit(qb, collection="a")
+    r2 = svc.drain_batches(force=True)
+    assert r2[u2].cached                       # warm hit on same state
+
+    svc.drop_collection("a")
+    svc.create_collection("a", [insert_fn("a", 5)])   # different corpus
+    u3 = svc.submit(qb, collection="a")
+    ub2 = svc.submit(qb, collection="b")
+    r3 = svc.drain_batches(force=True)
+    assert not r3[u3].cached                   # purge was mandatory
+    assert r3[ub2].cached                      # 'b' unaffected by churn
+    direct, _ = svc.query(qb, collection="a")
+    ids_d, _ = direct.reported(0)
+    np.testing.assert_array_equal(
+        np.sort(r3[u3].ids[0]), np.sort(np.asarray(ids_d)))
+    for i in range(r1[ub1].n_queries):
+        np.testing.assert_array_equal(r1[ub1].ids[i], r3[ub2].ids[i])
+        np.testing.assert_array_equal(r1[ub1].dists[i], r3[ub2].dists[i])
+
+
+def test_collection_checkpoint_roundtrip_and_names():
+    """The full collection tree (default corpus + named tenants with
+    quotas) survives save/restore into a FRESH service; the manifest
+    lists tenant names without loading arrays."""
+    from repro.checkpoint import CheckpointManager
+    cfg, params = _lm_cfg_params()
+    make = _make_service_factory("budgeted", cfg, params)
+    insert_fn, query_fn = _batch_fns(cfg)
+    svc = make()
+    corpus = insert_fn("a", 3)
+    svc.index_corpus([corpus])                 # default corpus rides too
+    svc.create_collection("t1", [insert_fn("a", 0)],
+                          quota=TenantQuota(rate=7.0, burst=3.0,
+                                            weight=2.0))
+    svc.create_collection("t2", [insert_fn("b", 0)])
+    svc.remove_documents([0, 1], collection="t1")
+    qb = query_fn(1)
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        svc.checkpoint(mgr, 7)
+        assert mgr.collection_names() == ["t1", "t2"]
+        assert mgr.collection_names(7) == ["t1", "t2"]
+        fresh = make()
+        assert fresh.restore(mgr) == 7
+    assert fresh.collections.names() == ["t1", "t2"]
+    q = fresh.collections.get("t1").quota
+    assert (q.rate, q.burst, q.weight) == (7.0, 3.0, 2.0)
+    # restored quota is live on the scheduler, not just recorded
+    ts = fresh.scheduler.stats()["tenants"]
+    assert ts["t1"]["rate"] == 7.0 and ts["t1"]["weight"] == 2.0
+    for name in ("t1", "t2"):
+        quiesce(svc)
+        quiesce(fresh)
+        ra, _ = svc.query(qb, collection=name)
+        rb, _ = fresh.query(qb, collection=name)
+        assert_reported_identical(ra, rb, strict_order=True)
+    r_def_a, _ = svc.query(qb)
+    r_def_b, _ = fresh.query(qb)
+    assert_reported_identical(r_def_a, r_def_b, strict_order=True)
+
+
+def test_service_shares_engine_and_family_across_collections():
+    """All tenants (and the default corpus) are built around ONE
+    QueryEngine and ONE LSH family object — the jit/bucket_fn cache is
+    shared by construction, not by coincidence."""
+    cfg, params = _lm_cfg_params()
+    svc = _make_service_factory("sync", cfg, params)()
+    insert_fn, _ = _batch_fns(cfg)
+    svc.index_corpus([insert_fn("a", 1)])
+    svc.create_collection("x", [insert_fn("a", 0)])
+    svc.create_collection("y", [insert_fn("b", 0)])
+    eng = svc.index._engine
+    assert svc.collections.get("x").index._engine is eng
+    assert svc.collections.get("y").index._engine is eng
+    fam = svc.index.family
+    assert svc.collections.get("x").index.family is fam
+    assert svc.collections.get("y").index.family is fam
+
+
+def test_service_stats_carry_collections_subtree():
+    cfg, params = _lm_cfg_params()
+    svc = _make_service_factory("sync", cfg, params)()
+    insert_fn, query_fn = _batch_fns(cfg)
+    svc.create_collection("only", [insert_fn("a", 0)])
+    svc.query(query_fn(0), collection="only")
+    s = svc.stats
+    assert set(s["collections"]) == COLLECTION_MANAGER_KEYS
+    sub = s["collections"]["collections"]["only"]
+    assert set(sub) == COLLECTION_STATS_KEYS
+    assert sub["queries"] == 4
+    # per-collection labeled series landed in the registry
+    snap = svc.obs.registry.snapshot()["counters"]
+    assert snap['repro_collection_queries_total{collection="only"}'] == 4

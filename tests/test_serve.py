@@ -327,17 +327,27 @@ def test_result_cache_lru_and_version_purge():
     # newest entries survive; oldest are gone
     assert cache.get(keys[-1]) is not None
     assert cache.get(keys[0]) is None
-    # a version move purges everything older on first sight
+    # a version move purges everything older on first sight (keys are
+    # (collection, version, radius, fingerprint) since multi-tenancy)
     cache.put(cache.key(2, 0.5, tok), *entry(9))
-    n_v1 = sum(1 for k in cache._entries if k[0] == 1)
+    n_v1 = sum(1 for k in cache._entries if k[1] == 1)
     assert cache.purge_stale(2) == n_v1 and n_v1 >= 1
-    assert all(k[0] == 2 for k in cache._entries)
+    assert all(k[1] == 2 for k in cache._entries)
     assert cache.purge_stale(2) == 0               # seen version: no scan
     assert cache.stats()["stale_drops"] == n_v1
     # distinct radius / dtype / shape fingerprints never collide
     assert cache.key(1, 0.5, tok) != cache.key(1, 0.6, tok)
     assert cache.key(1, 0.5, tok) != cache.key(
         1, 0.5, tok.astype(np.int64))
+    # ... nor do per-collection keys; a collection's versions are
+    # watermarked independently, and dropping it removes its entries
+    ka = cache.key(2, 0.5, tok, collection="a")
+    assert ka != cache.key(2, 0.5, tok)
+    cache.put(ka, *entry(10))
+    assert cache.purge_stale(2, collection="a") == 0
+    assert cache.get(ka) is not None
+    assert cache.drop_collection("a") == 1
+    assert cache.get(ka) is None
     # disabled cache (byte budget 0) stores nothing
     off = ResultCache(max_bytes=0)
     assert not off.put(off.key(1, 0.5, tok), *entry(0))
