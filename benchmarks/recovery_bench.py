@@ -1,0 +1,229 @@
+"""Recovery benchmark: snapshot stall + warm-standby restore time.
+
+Measures the incremental-checkpoint PR's headline claims at equal
+churn and merge backlog:
+
+  * snapshot stall — both disciplines checkpoint once (cold), take a
+    second churn wave that queues fresh merge work, then checkpoint
+    again; the SECOND checkpoint is timed.  The flush-barrier
+    discipline pays O(pending compaction) of inline merge work plus a
+    full-tree rewrite; the consistent-cut incremental discipline
+    writes O(new delta + manifest) (unchanged frozen levels dedup
+    against the chunk store by content address).
+    ``snapshot_stall_cut`` is the ratio of the two steady-state
+    checkpoint-call wall times.
+  * incremental bytes — a second snapshot after delta-only churn
+    rewrites only the delta, tombstones, and manifest;
+    ``incremental_bytes_frac`` is its written bytes over the full
+    flattened state size.
+  * recovery time — restore into a FRESH index (the warm standby),
+    asserted bit-identical on forced-route reported sets
+    (``restore_identical``).  With >= 2 host devices the elastic path
+    runs too: a 2-shard checkpoint taken mid-merge restored onto a
+    1-shard mesh (``elastic_restore_s`` / ``elastic_identical``).
+
+Each discipline gets one untimed warm run (jit caches) on its own
+fresh index before the timed run, mirroring ``lsm_bench``.  Emits
+``BENCH_recovery.json``; schema in docs/benchmarks.md, CI gate in the
+``recovery-bench-smoke`` job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import CostModel
+from repro.core.lsh import make_family
+from repro.data import clustered_dataset
+from repro.streaming import CompactionPolicy, DynamicHybridIndex
+
+R = 1.2
+
+
+def _mk(fam, delta_capacity: int, budget: int) -> DynamicHybridIndex:
+    policy = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                              fanout=2, step_rows=budget)
+    # cap must dominate any candidate set: the identity checks compare
+    # full reported sets, and truncation order is not a restore
+    # invariant
+    return DynamicHybridIndex(fam, num_buckets=1024, m=64, cap=8192,
+                              delta_capacity=delta_capacity,
+                              cost_model=CostModel(alpha=1.0, beta=10.0),
+                              policy=policy, key=0)
+
+
+def _churn(idx, x, n: int, n_churn: int, delta_capacity: int):
+    """Build + insert churn in delta-sized batches (each fill freezes a
+    level-0 segment and queues merges the budgeted policy leaves
+    unrun) + a tombstone sweep: the deep backlog both disciplines
+    snapshot."""
+    idx.build(x[:n])
+    lo = n
+    while lo < n + n_churn:
+        hi = min(lo + delta_capacity, n + n_churn)
+        idx.insert(x[lo:hi])
+        lo = hi
+    idx.delete(range(0, n, 9))
+    return idx
+
+
+def _sets(idx, q):
+    return {f: idx.query(jnp.asarray(q), R, force=f).neighbor_sets()
+            for f in ("lsh", "linear")}
+
+
+def _drain(idx):
+    while idx.has_compaction_work:
+        idx.compact_step(1 << 30)
+
+
+def main(scale: float = 0.12, emit: str | None = None) -> Dict[str, object]:
+    import tempfile
+    n = max(12000, int(100000 * scale))
+    n_churn = max(2048, n // 4)
+    n_churn2 = n_churn // 2
+    delta_capacity = 256
+    budget = delta_capacity // 2
+    d, L = 16, 8
+    x = np.asarray(clustered_dataset(n + n_churn + n_churn2 + 64, d,
+                                     n_clusters=32, dense_core_frac=0.2,
+                                     core_scale=0.05, seed=0, metric="l2"),
+                   np.float32)
+    q = x[::97][:16]
+    fam = make_family("l2", d=d, L=L, r=1.0)
+
+    def churn2(idx):
+        """Second churn wave between checkpoints: re-queues merge work
+        and dirties the delta + recent tombstones (deletes target the
+        fresh rows — the common churn shape — so the dirtied set stays
+        proportional to the wave, not the corpus)."""
+        lo = n + n_churn
+        while lo < n + n_churn + n_churn2:
+            hi = min(lo + delta_capacity, n + n_churn + n_churn2)
+            idx.insert(x[lo:hi])
+            lo = hi
+        idx.delete(range(n + n_churn, n + n_churn + n_churn2, 3))
+        return idx
+
+    # ------------------------------------------------ flush discipline
+    def flush_run() -> float:
+        idx = _churn(_mk(fam, delta_capacity, budget), x, n, n_churn,
+                     delta_capacity)
+        with tempfile.TemporaryDirectory() as dd:
+            mgr = CheckpointManager(dd)
+            _drain(idx)
+            mgr.save_index(1, idx)            # cold checkpoint, untimed
+            churn2(idx)
+            t0 = time.perf_counter()
+            _drain(idx)                       # the old barrier
+            mgr.save_index(2, idx)
+            return time.perf_counter() - t0
+
+    flush_run()                               # warm merge/build jits
+    flush_stall_s = flush_run()
+
+    # -------------------------------------------------- cut discipline
+    idx = _churn(_mk(fam, delta_capacity, budget), x, n, n_churn,
+                 delta_capacity)
+    cut_dir = tempfile.mkdtemp()
+    mgr_cut = CheckpointManager(cut_dir)
+    t0 = time.perf_counter()
+    mgr_cut.save_index(1, idx, incremental=True)
+    cold_cut_stall_s = time.perf_counter() - t0
+
+    churn2(idx)
+    pending_at_cut = int(idx.pending_merges)
+    full_state_bytes = int(sum(np.asarray(l).nbytes for l in
+                               jax.tree_util.tree_leaves(idx.state_dict())))
+    b0 = mgr_cut.stats()["bytes_written"]
+    t0 = time.perf_counter()
+    mgr_cut.save_index(2, idx, incremental=True)
+    cut_stall_s = time.perf_counter() - t0
+    mstats = mgr_cut.stats()
+    incremental_save_bytes = int(mstats["bytes_written"] - b0)
+
+    # --------------------------------------------- warm-standby restore
+    standby = _mk(fam, delta_capacity, budget)
+    t0 = time.perf_counter()
+    assert mgr_cut.restore_index(standby) == 2
+    restore_s = time.perf_counter() - t0
+    _drain(idx)
+    _drain(standby)
+    restore_identical = _sets(idx, q) == _sets(standby, q)
+
+    out: Dict[str, object] = {
+        "n": n, "n_churn": n_churn, "delta_capacity": delta_capacity,
+        "budget_rows": budget, "pending_merges_at_cut": pending_at_cut,
+        # headline: steady-state checkpoint-call stall, flush vs cut
+        "flush_checkpoint_stall_s": flush_stall_s,
+        "cut_checkpoint_stall_s": cut_stall_s,
+        "cold_cut_stall_s": cold_cut_stall_s,
+        "snapshot_stall_cut": flush_stall_s / max(cut_stall_s, 1e-9),
+        # headline: incremental snapshot writes a fraction of the tree
+        "full_state_bytes": full_state_bytes,
+        "incremental_save_bytes": incremental_save_bytes,
+        "incremental_bytes_frac": (incremental_save_bytes
+                                   / max(full_state_bytes, 1)),
+        "chunks_written": mstats["chunks_written"],
+        "chunks_reused": mstats["chunks_reused"],
+        "bytes_reused": mstats["bytes_reused"],
+        # headline: warm-standby recovery
+        "restore_s": restore_s,
+        "restore_identical": bool(restore_identical),
+        "elastic_restore_s": None,
+        "elastic_identical": None,
+        "shards_saved": None,
+    }
+
+    # ----------------------------- elastic failover (needs >= 2 devices)
+    if len(jax.devices()) >= 2:
+        from repro.streaming import ShardedDynamicHybridIndex
+        n_sh = min(n, 4000)
+        mesh2 = jax.make_mesh((2,), ("data",))
+        mesh1 = jax.make_mesh((1,), ("data",))
+
+        def mk_sh(mesh):
+            return ShardedDynamicHybridIndex(
+                fam, mesh=mesh, num_buckets=1024, m=64, cap=8192,
+                delta_capacity=delta_capacity,
+                policy=CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0,
+                                        fanout=2, step_rows=budget),
+                routing="per_shard", max_out=n_sh + 512, key=0)
+
+        sh = mk_sh(mesh2)
+        sh.build(x[:n_sh])
+        sh.insert(x[n_sh:n_sh + 512])
+        sh.delete(range(0, n_sh, 11))
+        sh.compact_step(budget)               # checkpoint mid-merge
+        sh_dir = tempfile.mkdtemp()
+        mgr_sh = CheckpointManager(sh_dir)
+        mgr_sh.save_index(1, sh, incremental=True)
+        narrow = mk_sh(mesh1)
+        t0 = time.perf_counter()
+        assert mgr_sh.restore_index(narrow) == 1
+        out["elastic_restore_s"] = time.perf_counter() - t0
+        assert narrow.validate_locations() == narrow.n
+        _drain(sh)
+        _drain(narrow)
+        out["elastic_identical"] = bool(_sets(sh, q) == _sets(narrow, q))
+        out["shards_saved"] = 2
+
+    if emit:
+        with open(emit, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.12)
+    ap.add_argument("--emit", metavar="PATH", default=None)
+    args = ap.parse_args()
+    print(json.dumps(main(args.scale, emit=args.emit), indent=2))

@@ -37,7 +37,10 @@ def main() -> None:
                          "throughput bench (coalescing + result cache vs "
                          "naive), --emit BENCH_serve_mt.json the multi-"
                          "tenant flood-isolation bench (per-tenant token "
-                         "buckets under a noisy neighbor). Skips the "
+                         "buckets under a noisy neighbor), --emit "
+                         "BENCH_recovery.json the checkpoint-stall + "
+                         "warm-standby recovery bench (>= 2 host devices "
+                         "forced for the elastic restore). Skips the "
                          "paper tables")
     args = ap.parse_args()
     scale = 0.03 if args.quick else args.scale
@@ -70,6 +73,34 @@ def main() -> None:
               f"{1e6 * rows['skew_latency_delta_s']:.1f},"
               f"linear-route p99 cut {rows['p99_keep_local_s'] / max(rows['p99_load_balance_s'], 1e-12):.2f}x; "
               f"padded-rows cut {rows['padded_rows_cut']:.2f}x")
+        print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
+              f"scale={scale} -> {args.emit}")
+        return
+
+    if args.emit and "recovery" in os.path.basename(args.emit):
+        force_two_host_devices()
+        from benchmarks import recovery_bench
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        rows = recovery_bench.main(scale, emit=args.emit)
+        print(f"recovery_cut_stall,"
+              f"{1e6 * rows['cut_checkpoint_stall_s']:.1f},"
+              f"consistent-cut incremental snapshot with "
+              f"{rows['pending_merges_at_cut']} merges queued "
+              f"(flush barrier: "
+              f"{1e3 * rows['flush_checkpoint_stall_s']:.1f}ms; "
+              f"stall cut {rows['snapshot_stall_cut']:.1f}x)")
+        print(f"recovery_incremental_bytes,{0:.1f},"
+              f"{rows['incremental_save_bytes']} of "
+              f"{rows['full_state_bytes']} state bytes rewritten "
+              f"({100 * rows['incremental_bytes_frac']:.1f}%; "
+              f"{rows['chunks_reused']} chunks reused)")
+        print(f"recovery_restore,"
+              f"{1e6 * rows['restore_s']:.1f},"
+              f"warm-standby restore, identical="
+              f"{rows['restore_identical']}; elastic 2->1 "
+              f"{rows['elastic_restore_s']}s, identical="
+              f"{rows['elastic_identical']}")
         print(f"total_bench_seconds,{1e6*(time.time()-t0):.0f},"
               f"scale={scale} -> {args.emit}")
         return

@@ -1,3 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, array_digest
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "array_digest"]

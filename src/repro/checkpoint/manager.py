@@ -1,13 +1,34 @@
 """Sharded, atomic, async checkpointing with cross-mesh elastic restore.
 
-Layout:  <dir>/step_<N>/
+Full-snapshot layout:  <dir>/step_<N>/
             manifest.json      tree structure, shapes, dtypes, step
             <leafpath>.npy     one file per leaf
             COMMITTED          empty marker written LAST (atomicity)
 
-Fault-tolerance contract used by the train loop:
+Incremental (content-addressed) layout, used by the streaming index
+snapshots (``save_incremental``):
+
+    <dir>/chunks/<digest>.npy  immutable leaf payloads, keyed by a
+                               blake2b content address and shared by
+                               every step that references them
+    <dir>/step_<N>/
+            manifest.json      leaf path -> {chunk, shape, dtype}
+            COMMITTED          same atomicity marker
+
+A frozen LSM level never changes after it is built, so consecutive
+snapshots reference the same chunks and write only the delta, the
+tombstone bitmaps, and the manifest — checkpoint write cost is
+O(changed bytes), not O(index).  Chunk files are published with an
+atomic rename, and a reference-counting GC removes chunks no committed
+step references once ``keep``-pruning drops their last step.
+
+Fault-tolerance contract used by the train loop and the serving path:
   * a crash mid-save leaves no COMMITTED marker -> restore skips it;
   * restore() picks the newest committed step;
+  * manager init sweeps torn-write litter: ``step_*.tmp`` dirs,
+    uncommitted ``step_*`` dirs, half-written chunk tmp files, and
+    orphaned chunks (keep-pruning never counts any of these, so
+    without the sweep a crashing process leaks disk forever);
   * restore(target_shardings=...) device_puts each leaf with the NEW
     mesh's NamedSharding — this is the elastic-scaling path (a 16x16
     checkpoint restores onto 2x16x16 and vice versa, since the on-disk
@@ -15,22 +36,45 @@ Fault-tolerance contract used by the train loop:
   * saves run on a background thread (training continues), joined
     before the next save or shutdown.
 
+``fault_hook`` is the crash-fault-injection seam: tests pass a callable
+that raises at named points ("leaf" after each leaf/chunk write,
+"pre_commit" before the marker, "post_commit" after the publish) to
+prove restores are bit-exact at every torn-write boundary
+(tests/test_recovery.py).
+
 Multi-host note: in a real cluster each process writes only
 ``addressable_shards`` under a per-host subdir and host 0 commits; in
 this single-process container that degenerates to full arrays.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+import time
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
 
 _COMMIT = "COMMITTED"
+_CHUNKS = "chunks"
+
+
+def array_digest(arr) -> str:
+    """Content address of one stored leaf: blake2b over dtype + shape +
+    raw bytes.  bfloat16 hashes as its stored uint16 view so the digest
+    always matches the bytes on disk."""
+    arr = np.asarray(arr)
+    if str(arr.dtype) == "bfloat16":
+        arr = arr.view(np.uint16)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 def _flatten(tree, prefix=""):
@@ -63,26 +107,49 @@ def _unflatten(flat: Dict[str, Any], template):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 fault_hook: Optional[Callable[..., None]] = None):
         self.dir = directory
         self.keep = keep
+        self._fault_hook = fault_hook
         self._thread: Optional[threading.Thread] = None
+        self._saves = 0
+        self._incremental_saves = 0
+        self._chunks_written = 0
+        self._chunks_reused = 0
+        self._bytes_written = 0
+        self._bytes_reused = 0
+        self._chunks_gced = 0
+        self._litter_swept = 0
+        self._last_save_seconds = 0.0
+        self._last_restore_seconds = 0.0
         os.makedirs(directory, exist_ok=True)
+        self._sweep_litter()
+
+    def _fault(self, point: str, **info) -> None:
+        """Crash-fault-injection seam: tests install a hook that raises
+        at a named save-path point (see module docstring)."""
+        if self._fault_hook is not None:
+            self._fault_hook(point, **info)
 
     # --------------------------------------------------------------- save
     def save(self, step: int, state, blocking: bool = False):
+        """Full (self-contained) snapshot: every leaf written under the
+        step dir.  ``save_incremental`` is the content-addressed
+        variant the streaming snapshots use."""
         self.wait()
         flat = {p: np.asarray(jax.device_get(v))
                 for p, v in _flatten(state).items()}
 
         def _write():
+            t0 = time.perf_counter()
             final = os.path.join(self.dir, f"step_{step:010d}")
             tmp = final + ".tmp"
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             manifest = {"step": step, "leaves": {}}
-            for path, arr in flat.items():
+            for i, (path, arr) in enumerate(flat.items()):
                 fn = path.replace("/", "__") + ".npy"
                 logical = str(arr.dtype)
                 if logical == "bfloat16":  # numpy can't serialize bf16
@@ -91,14 +158,95 @@ class CheckpointManager:
                 manifest["leaves"][path] = {
                     "file": fn, "shape": list(arr.shape),
                     "dtype": logical}
+                self._fault("leaf", path=path, index=i)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
+            self._fault("pre_commit", step=step)
             with open(os.path.join(tmp, _COMMIT), "w"):
                 pass
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)          # atomic publish
+            self._fault("post_commit", step=step)
+            self._saves += 1
+            self._last_save_seconds = time.perf_counter() - t0
             self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def save_incremental(self, step: int, state,
+                         digests: Optional[Dict[str, str]] = None,
+                         blocking: bool = False):
+        """Content-addressed snapshot: write only chunks the store does
+        not already hold; the step dir carries just the manifest and
+        the COMMITTED marker, so consecutive snapshots of a streaming
+        index cost O(delta + tombstones + manifest) bytes.
+
+        ``digests``: optional {leaf path: content address} hints for
+        leaves the caller knows are immutable (frozen-level arrays,
+        cached by ``streaming.segment.frozen_digests``); a hinted leaf
+        whose chunk already exists is referenced without re-hashing.
+        Hints must only ever be supplied for truly immutable arrays —
+        the crash-fault differential tests are the check that holds
+        producers to that.
+        """
+        self.wait()
+        digests = dict(digests or {})
+        flat = {p: np.asarray(jax.device_get(v))
+                for p, v in _flatten(state).items()}
+
+        def _write():
+            t0 = time.perf_counter()
+            cdir = os.path.join(self.dir, _CHUNKS)
+            os.makedirs(cdir, exist_ok=True)
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "format": "chunks", "leaves": {}}
+            for i, (path, arr) in enumerate(flat.items()):
+                logical = str(arr.dtype)
+                stored = (arr.view(np.uint16) if logical == "bfloat16"
+                          else arr)
+                dg = digests.get(path)
+                if dg is not None and not os.path.exists(
+                        os.path.join(cdir, dg + ".npy")):
+                    dg = None      # first sighting: hash + write below
+                if dg is None:
+                    dg = array_digest(stored)
+                cfn = os.path.join(cdir, dg + ".npy")
+                if os.path.exists(cfn):
+                    self._chunks_reused += 1
+                    self._bytes_reused += stored.nbytes
+                else:
+                    ctmp = cfn + ".tmp"
+                    with open(ctmp, "wb") as f:
+                        np.save(f, stored)
+                    os.replace(ctmp, cfn)   # atomic chunk publish
+                    self._chunks_written += 1
+                    self._bytes_written += stored.nbytes
+                manifest["leaves"][path] = {
+                    "chunk": dg, "shape": list(stored.shape),
+                    "dtype": logical}
+                self._fault("leaf", path=path, index=i)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            self._fault("pre_commit", step=step)
+            with open(os.path.join(tmp, _COMMIT), "w"):
+                pass
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # atomic publish
+            self._fault("post_commit", step=step)
+            self._incremental_saves += 1
+            self._last_save_seconds = time.perf_counter() - t0
+            self._gc()
+            self._gc_chunks()
 
         if blocking:
             _write()
@@ -117,6 +265,71 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
                           ignore_errors=True)
 
+    def _gc_chunks(self):
+        """Drop chunks no committed step references (runs after every
+        incremental save and at init, so keep-pruning a step also frees
+        the chunk bytes only it referenced)."""
+        cdir = os.path.join(self.dir, _CHUNKS)
+        if not os.path.isdir(cdir):
+            return
+        referenced = set()
+        for s in self.committed_steps():
+            d = os.path.join(self.dir, f"step_{s:010d}")
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            for meta in manifest["leaves"].values():
+                if "chunk" in meta:
+                    referenced.add(meta["chunk"] + ".npy")
+        for name in os.listdir(cdir):
+            if name not in referenced:
+                os.remove(os.path.join(cdir, name))
+                self._chunks_gced += 1
+
+    def _sweep_litter(self):
+        """Torn-write hygiene at startup: a crash mid-save leaves
+        ``step_*.tmp`` dirs, uncommitted ``step_*`` dirs, and chunk
+        ``*.tmp`` files that ``keep``-pruning never counts; a crash
+        between chunk writes and the commit leaves orphaned chunks.
+        All are swept here so a restart converges to exactly the
+        committed steps plus the chunks they reference."""
+        for name in os.listdir(self.dir):
+            p = os.path.join(self.dir, name)
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
+                self._litter_swept += 1
+            elif (name.startswith("step_") and os.path.isdir(p)
+                  and not os.path.exists(os.path.join(p, _COMMIT))):
+                shutil.rmtree(p, ignore_errors=True)
+                self._litter_swept += 1
+        cdir = os.path.join(self.dir, _CHUNKS)
+        if os.path.isdir(cdir):
+            for name in os.listdir(cdir):
+                if ".tmp" in name:
+                    os.remove(os.path.join(cdir, name))
+                    self._litter_swept += 1
+            self._gc_chunks()
+
+    # ------------------------------------------------------ observability
+    def stats(self) -> Dict[str, object]:
+        """Snapshot-cost counters (pinned: obs/schema.py
+        ``CHECKPOINT_STATS_KEYS``).  ``bytes_written``/``bytes_reused``
+        split each incremental save into new chunk bytes vs bytes
+        referenced from the store — the incremental-vs-full headline
+        ``BENCH_recovery.json`` asserts in CI."""
+        return {
+            "saves": self._saves,
+            "incremental_saves": self._incremental_saves,
+            "chunks_written": self._chunks_written,
+            "chunks_reused": self._chunks_reused,
+            "bytes_written": self._bytes_written,
+            "bytes_reused": self._bytes_reused,
+            "chunks_gced": self._chunks_gced,
+            "litter_swept": self._litter_swept,
+            "steps_kept": len(self.committed_steps()),
+            "last_save_seconds": self._last_save_seconds,
+            "last_restore_seconds": self._last_restore_seconds,
+        }
+
     # ------------------------------------------------------------ restore
     def committed_steps(self):
         out = []
@@ -131,7 +344,8 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     # ---------------------------------------------------- streaming index
-    def save_index(self, step: int, index, blocking: bool = True):
+    def save_index(self, step: int, index, blocking: bool = True,
+                   incremental: bool = False):
         """Snapshot a streaming index's segment state.
 
         ``index`` is any object with a ``state_dict()`` returning an
@@ -145,15 +359,27 @@ class CheckpointManager:
         layouts (``rows_s``/``live_s`` meta) ride along, so rebalanced
         states round-trip exactly (docs/streaming.md has the manifest
         layout).
+
+        ``incremental=True`` uses the content-addressed layout and the
+        index's ``state_digests()`` hints (when it has them), so
+        unchanged frozen levels are referenced, not rewritten
+        (docs/recovery.md).
         """
-        self.save(step, index.state_dict(), blocking=blocking)
+        if incremental:
+            hints = getattr(index, "state_digests", None)
+            self.save_incremental(step, index.state_dict(),
+                                  digests=hints() if hints else None,
+                                  blocking=blocking)
+        else:
+            self.save(step, index.state_dict(), blocking=blocking)
 
     def restore_index(self, index, step: Optional[int] = None):
         """Restore segment state into ``index`` (constructed with the
-        same family/config — and, for the sharded index, the same shard
-        count — as the one that saved; ``load_state_dict`` re-places
-        sharded leaves on the index's current mesh).  Returns the step,
-        or None when no committed checkpoint exists.
+        same family/config as the one that saved; ``load_state_dict``
+        re-places sharded leaves on the index's current mesh — a
+        DIFFERENT shard count re-partitions the saved rows, the elastic
+        restore path).  Returns the step, or None when no committed
+        checkpoint exists.
 
         The restore is manifest-driven (``restore_tree``), not
         template-driven: a streaming index's level stack is a variable
@@ -199,6 +425,7 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             return None, None
+        t0 = time.perf_counter()
         state: Dict[str, Any] = {}
         for path, arr in self._load_leaves(step):
             node = state
@@ -206,16 +433,23 @@ class CheckpointManager:
             for p in parts[:-1]:
                 node = node.setdefault(p, {})
             node[parts[-1]] = arr
+        self._last_restore_seconds = time.perf_counter() - t0
         return state, step
 
     def _load_leaves(self, step: int):
         """Yield (leaf path, host array) pairs of a committed step —
-        the one place that knows the on-disk leaf format."""
+        the one place that knows the on-disk leaf formats (per-step
+        files and content-addressed chunks)."""
         d = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
         for path, meta in manifest["leaves"].items():
-            arr = np.load(os.path.join(d, meta["file"]))
+            if "chunk" in meta:
+                fn = os.path.join(self.dir, _CHUNKS,
+                                  meta["chunk"] + ".npy")
+            else:
+                fn = os.path.join(d, meta["file"])
+            arr = np.load(fn)
             if meta["dtype"] == "bfloat16":
                 import ml_dtypes
                 arr = arr.view(ml_dtypes.bfloat16)

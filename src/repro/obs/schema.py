@@ -15,8 +15,8 @@ __all__ = ["RETRIEVAL_SERVICE_KEYS", "COMPACTION_STATS_KEYS",
            "DRIVER_STATS_KEYS", "SCHEDULER_STATS_KEYS",
            "SCHEDULER_TENANT_KEYS", "CACHE_STATS_KEYS",
            "COLLECTION_STATS_KEYS", "COLLECTION_MANAGER_KEYS",
-           "WORK_PHASE_KEYS", "EVENT_BASE_FIELDS",
-           "retrieval_stats_keys"]
+           "CHECKPOINT_STATS_KEYS", "WORK_PHASE_KEYS",
+           "EVENT_BASE_FIELDS", "retrieval_stats_keys"]
 
 # RetrievalService's own serving counters (before the index_stats
 # merge); "scheduler", "cache", and "collections" are sub-dicts pinned
@@ -67,8 +67,16 @@ SHARDED_INDEX_EXTRA_KEYS = frozenset({
 DRIVER_STATS_KEYS = frozenset({
     "worker_alive", "pending_gathers", "staged_rows", "staged_ready",
     "budget_rows", "stage_calls", "prepares", "drains", "applied",
-    "flushes", "worker_errors", "collections", "fairness",
+    "flushes", "cuts", "worker_errors", "collections", "fairness",
     "work_seconds"})
+
+# CheckpointManager.stats() — the incremental-snapshot ledger:
+# chunks/bytes written vs reused (content-address hit rate), GC and
+# litter-sweep counts, and the last save/restore wall times
+CHECKPOINT_STATS_KEYS = frozenset({
+    "saves", "incremental_saves", "chunks_written", "chunks_reused",
+    "bytes_written", "bytes_reused", "chunks_gced", "litter_swept",
+    "steps_kept", "last_save_seconds", "last_restore_seconds"})
 
 # CollectionManager.stats()["collections"][<name>] — one tenant's view
 COLLECTION_STATS_KEYS = frozenset({

@@ -274,6 +274,20 @@ class CollectionManager:
             }
         return out
 
+    def state_digests(self) -> Dict[str, str]:
+        """Content-address hints for every tenant's immutable leaves,
+        namespaced to match the ``state_dict`` layout — lets
+        ``save_incremental`` skip re-hashing frozen segments across the
+        whole collection tree."""
+        out: Dict[str, str] = {}
+        for name, col in self._collections.items():
+            digests = getattr(col.index, "state_digests", None)
+            if digests is None:
+                continue
+            for path, dg in digests().items():
+                out[f"{name}/index/{path}"] = dg
+        return out
+
     def load_state_dict(self, state: Dict[str, Dict[str, object]]) -> None:
         """Rebuild the full collection tree from a checkpoint subtree:
         existing collections are dropped, each saved tenant is

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 import jax
@@ -591,29 +592,67 @@ class RetrievalService:
         return out
 
     # ------------------------------------------------- driver lifecycle
-    def checkpoint(self, manager, step: int) -> None:
-        """Flush pending merge work, then snapshot the FULL collection
-        tree: the default corpus index at the top level (the
-        pre-collections layout, so old checkpoints stay readable) plus
-        every named collection — index state and quota — nested under
-        ``collections/<name>/...`` (a per-collection manifest subtree;
+    def checkpoint(self, manager, step: int,
+                   barrier: str = "cut") -> None:
+        """Snapshot the FULL collection tree: the default corpus index
+        at the top level (the pre-collections layout, so old
+        checkpoints stay readable) plus every named collection — index
+        state and quota — nested under ``collections/<name>/...`` (a
+        per-collection manifest subtree;
         ``CheckpointManager.collection_names`` lists them).
 
-        The flush is the async-mode checkpoint barrier: every queued
-        merge finishes (stage remainder + swap) across ALL attached
-        collections before the save runs, so the snapshot never
-        captures a half-staged merge.  ``manager`` is a
-        ``CheckpointManager``.
+        ``barrier`` selects the async-mode consistency barrier:
+
+        * ``"cut"`` (default): a consistent-cut snapshot — state is
+          captured under the driver lock WITHOUT draining queued
+          merges (``CompactionDriver.consistent_cut``), and saved
+          incrementally: frozen levels are content-addressed via the
+          index's cached ``state_digests`` hints, so the snapshot
+          writes only the delta, tombstones, and manifest.  Valid
+          because staged merge progress is volatile by contract.
+          Checkpoint stall is O(delta + manifest), not O(pending
+          compaction), in all three compaction modes.
+        * ``"flush"``: the legacy barrier — every queued merge
+          finishes inline (stage remainder + swap) across ALL attached
+          collections, then a full (non-incremental) save runs.
+
+        ``manager`` is a ``CheckpointManager``.
         """
         assert self.index is not None or len(self.collections), \
             "call index_corpus or create_collection first"
-        if self.driver is not None:
-            self.driver.flush()
-        state = self.index.state_dict() if self.index is not None else {}
-        cols = self.collections.state_dict()
-        if cols:
-            state = {**state, "collections": cols}
-        manager.save(step, state, blocking=True)
+        assert barrier in ("cut", "flush"), barrier
+        t0 = time.perf_counter()
+
+        def _capture():
+            st: Dict[str, object] = {}
+            dg: Dict[str, str] = {}
+            if self.index is not None:
+                st = self.index.state_dict()
+                sd = getattr(self.index, "state_digests", None)
+                if sd is not None:
+                    dg.update(sd())
+            cols = self.collections.state_dict()
+            if cols:
+                st = {**st, "collections": cols}
+                dg.update({f"collections/{p}": d for p, d in
+                           self.collections.state_digests().items()})
+            return st, dg
+
+        if barrier == "flush":
+            if self.driver is not None:
+                self.driver.flush()
+            state, _ = _capture()
+            manager.save(step, state, blocking=True)
+        else:
+            if self.driver is not None:
+                state, digests = self.driver.consistent_cut(_capture)
+            else:
+                state, digests = _capture()
+            manager.save_incremental(step, state, digests=digests,
+                                     blocking=True)
+        self.obs.events.emit(
+            "snapshot", step=int(step), barrier=barrier,
+            seconds=time.perf_counter() - t0)
 
     def restore(self, manager, step: Optional[int] = None):
         """Restore the full collection tree from a committed checkpoint
@@ -627,6 +666,7 @@ class RetrievalService:
         may restore directly — the default index is built on demand
         when the checkpoint carries top-level corpus state.  Returns
         the restored step (None: no committed checkpoint)."""
+        t0 = time.perf_counter()
         if self.driver is not None:
             self.driver.stop()
         state, restored = manager.restore_tree(step=step)
@@ -647,6 +687,10 @@ class RetrievalService:
             self.driver.start()
             if self.index is not None and "" not in self.driver.indexes():
                 self.driver.attach("", self.index)
+        self.obs.events.emit(
+            "restore", step=int(restored),
+            collections=len(cols),
+            seconds=time.perf_counter() - t0)
         return restored
 
     def shutdown(self, flush: bool = True,

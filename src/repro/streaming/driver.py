@@ -132,6 +132,7 @@ class CompactionDriver:
         self._drains = 0            # control-thread drain() calls
         self._applied = 0           # merges swapped in via drain/flush
         self._flushes = 0
+        self._cuts = 0              # consistent-cut snapshot captures
         self._errors: List[str] = []
 
     # ----------------------------------------------------------- index pool
@@ -258,6 +259,26 @@ class CompactionDriver:
                              applied=applied)
         return applied
 
+    def consistent_cut(self, capture):
+        """CONTROL-THREAD ONLY: run ``capture()`` under the driver lock
+        and return its result — a consistent-cut snapshot barrier.
+
+        Unlike ``flush`` this does NOT drain queued merges: the lock
+        alone excludes the worker, so the callback sees the index
+        between bounded staging gathers.  That is a valid checkpoint
+        state because staged merge progress is volatile by contract
+        (its inputs are still complete segments on disk; a restore
+        re-derives the schedule and restages).  Cost is therefore
+        O(capture) — for an incremental snapshot, O(delta + manifest) —
+        instead of O(pending compaction), regardless of how much merge
+        work is queued.
+        """
+        self._cuts += 1
+        with self._mu:
+            out = capture()
+        self.obs.events.emit("snapshot_cut", name=self.name)
+        return out
+
     # ------------------------------------------------------------- worker
     def _service_one(self, name: str, idx) -> bool:
         """One bounded worker op on one index (under the lock): a
@@ -320,7 +341,8 @@ class CompactionDriver:
         staging buffers, ``staged_ready`` head-awaiting-swap,
         ``worker_alive``, plus cumulative ``stage_calls`` / ``prepares``
         (worker gathers and pre-builds), ``drains`` / ``applied`` /
-        ``flushes`` (control-thread side), and ``worker_errors``.
+        ``flushes`` / ``cuts`` (control-thread side; ``cuts`` counts
+        consistent-cut snapshot captures), and ``worker_errors``.
         ``work_seconds`` is the index's per-phase compaction-work
         accumulator — the same dict ``index_stats()`` reports, never a
         second measurement.  With multiple attached collections the
@@ -352,6 +374,7 @@ class CompactionDriver:
             "drains": self._drains,
             "applied": self._applied,
             "flushes": self._flushes,
+            "cuts": self._cuts,
             "worker_errors": len(self._errors),
             "collections": len(indexes),
             "fairness": dict(self._fairness),

@@ -55,7 +55,7 @@ from repro.streaming import tombstones as tomb_lib
 from repro.streaming.compaction import CompactionPolicy, CompactionStats
 from repro.streaming.segment import (FrozenSegment, MainSegment,
                                      SegmentStack, freeze_segment,
-                                     mark_rows_dead)
+                                     frozen_digests, mark_rows_dead)
 
 __all__ = ["DynamicHybridIndex"]
 
@@ -660,6 +660,21 @@ class DynamicHybridIndex:
                      "delta_d": np.int64(0 if self.delta is None else d),
                      "next_uid": np.int64(self.stack._next_uid)},
         }
+
+    def state_digests(self) -> Dict[str, str]:
+        """Content-address hints matching ``state_dict`` leaf paths,
+        for the leaves that are immutable once frozen.
+
+        ``CheckpointManager.save_incremental`` uses these to reference
+        unchanged level chunks without re-hashing them; the tombstone
+        bitmaps, delta, params, and meta change between snapshots and
+        are never hinted (they re-hash each save).
+        """
+        out: Dict[str, str] = {}
+        for i, f in enumerate(self.stack.segments):
+            for k, dg in frozen_digests(f).items():
+                out[f"segments/{i:04d}/{k}"] = dg
+        return out
 
     def load_state_dict(self, state) -> "DynamicHybridIndex":
         """Restore stack + delta state saved by ``state_dict``."""

@@ -35,13 +35,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import array_digest
 from repro.core.engine import _pad_size
 from repro.core.lsh.tables import LSHTables, build_tables
 from repro.obs.metrics import WorkPhases, time_block
 from repro.streaming import tombstones as tomb_lib
 
 __all__ = ["MainSegment", "build_main", "FrozenSegment", "freeze_segment",
-           "mark_rows_dead", "MergeTask", "MergeResult", "SegmentStack"]
+           "frozen_digests", "mark_rows_dead", "MergeTask", "MergeResult",
+           "SegmentStack"]
 
 
 @dataclasses.dataclass
@@ -81,6 +83,11 @@ class FrozenSegment:
     tomb: tomb_lib.Tombstones
     n_rows: int             # real rows (tombstoned included, pads excluded)
     n_live: int
+    # content addresses of the immutable leaves, computed lazily by
+    # frozen_digests() and cached here — only tombstone state ever
+    # rebinds after construction, so these stay valid for the
+    # segment's lifetime
+    digests: Optional[Dict[str, str]] = None
 
     @property
     def n_pad(self) -> int:
@@ -89,6 +96,25 @@ class FrozenSegment:
     @property
     def n_dead(self) -> int:
         return self.n_rows - self.n_live
+
+
+def frozen_digests(f: FrozenSegment) -> Dict[str, str]:
+    """Content addresses of a frozen segment's immutable leaves.
+
+    Computed once per segment and cached on it, so an incremental
+    checkpoint (``CheckpointManager.save_incremental``) can reference
+    unchanged level chunks without re-hashing — snapshot hashing cost
+    stays O(delta + tombstones), not O(index).  The mutable leaves
+    (``live``/``tomb_counts``, rebound by ``mark_rows_dead``) are
+    deliberately NOT here: they re-hash every snapshot.
+    """
+    if f.digests is None:
+        t = f.seg.tables
+        f.digests = {k: array_digest(np.asarray(v)) for k, v in (
+            ("x", f.seg.x), ("ids", f.seg.ids),
+            ("bucket_ids", f.seg.bucket_ids), ("perm", t.perm),
+            ("starts", t.starts), ("registers", t.registers))}
+    return f.digests
 
 
 def freeze_segment(x: np.ndarray, ext_ids: np.ndarray, bucket_fn, params,

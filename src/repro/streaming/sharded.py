@@ -69,6 +69,7 @@ from repro.core.engine import (QueryEngine, SegmentEstimate, TableSegment,
                                _pad_size, compact_results, finalize_route)
 from repro.core.lsh.tables import LSHTables, build_tables
 from repro.core import hll as hll_lib
+from repro.checkpoint.manager import array_digest
 from repro.obs import Observability
 from repro.obs.metrics import WorkPhases, time_block
 from repro.streaming import delta as delta_lib
@@ -132,6 +133,10 @@ class _ShardLevel:
     leaves: Dict[str, jax.Array]    # _LEAVES, leading dim = shard axis
     rows_s: np.ndarray              # (S,) real rows (tombstoned included)
     live_s: np.ndarray              # (S,)
+    # content addresses of the immutable leaves, cached lazily by
+    # state_digests() — deletes rebind only live/tomb_counts, so these
+    # stay valid for the level's lifetime
+    digests: Optional[Dict[str, str]] = None
 
     @property
     def n_rows(self) -> int:
@@ -1241,8 +1246,37 @@ class ShardedDynamicHybridIndex:
                      "placement": np.array(self.placement.name)},
         }
 
+    # the six build-time leaves of a level; only live/tomb_counts
+    # rebind after construction, so their digests can be cached
+    _IMMUTABLE_LEAVES = ("x", "ids", "bucket_ids", "perm", "starts",
+                         "registers")
+
+    def state_digests(self) -> Dict[str, str]:
+        """Content addresses for the immutable level leaves.
+
+        Cached on each ``_ShardLevel``: deletes rebind only
+        ``live``/``tomb_counts``, so the build-time leaves never change
+        for the level's lifetime.  Feeding these hints to
+        ``CheckpointManager.save_incremental`` makes snapshot hashing
+        O(delta + tombstones) instead of O(corpus).
+        """
+        out: Dict[str, str] = {}
+        for i, l in enumerate(self._levels):
+            if l.digests is None:
+                l.digests = {k: array_digest(np.asarray(l.leaves[k]))
+                             for k in self._IMMUTABLE_LEAVES}
+            for k, dg in l.digests.items():
+                out[f"levels/{i:04d}/{k}"] = dg
+        return out
+
     def load_state_dict(self, state) -> "ShardedDynamicHybridIndex":
-        """Restore sharded level-stack state saved by ``state_dict``."""
+        """Restore sharded level-stack state saved by ``state_dict``.
+
+        The saved shard count may differ from the current mesh: leaves
+        are mesh-agnostic host arrays with a leading shard axis, so a
+        mismatch routes through ``_load_elastic`` which re-deals live
+        rows onto the current shards.
+        """
         self.params = jax.tree_util.tree_map(jnp.asarray, state["params"])
         # cached query fns bake in delta_capacity (the max_out clamp):
         # a restore may change it, so the cache cannot survive
@@ -1265,8 +1299,9 @@ class ShardedDynamicHybridIndex:
             self._loc = {}
             return self
         ds = state["delta"]
-        S = np.asarray(ds["live"]).shape[0]
-        assert S == self.shards, (S, self.shards)
+        S = int(np.asarray(ds["live"]).shape[0])
+        if S != self.shards:
+            return self._load_elastic(state, ds, S)
         put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
         self._delta = {k: put(v) for k, v in ds.items()}
         self.delta_capacity = int(np.asarray(ds["live"]).shape[1]) - 1
@@ -1322,4 +1357,85 @@ class ShardedDynamicHybridIndex:
             for i in range(int(self._delta_count_s[s_i])):
                 if dlive[s_i, i]:
                     self._loc[int(dids[s_i, i])] = (s_i, "d", int(i))
+        return self
+
+    def _load_elastic(self, state, ds,
+                      S_saved: int) -> "ShardedDynamicHybridIndex":
+        """Restore a checkpoint saved on a different shard count.
+
+        Live rows of each saved level are gathered host-side together
+        with their staged hashes and dealt round-robin onto the current
+        mesh through ``_make_level`` (no re-hash) — the same row
+        movement the rebalancer performs, which preserves reported sets
+        because placement never affects them.  Dead rows drop exactly
+        as the next merge would have dropped them.  Delta rows re-deal
+        the same way; if the new mesh's total delta capacity cannot
+        hold them, they freeze into a level first, like an overflow
+        flush.
+        """
+        S, L = self.shards, self.family.L
+        self.delta_capacity = int(np.asarray(ds["live"]).shape[1]) - 1
+        self._d = int(np.asarray(ds["x"]).shape[2])
+        self._dtype = np.asarray(ds["x"]).dtype
+        self._loc = {}
+        self._levels = []
+        lvls = dict(state.get("levels") or {})
+        ms = state.get("main")
+        if ms is not None and np.asarray(ms["x"]).shape[1] > 0:
+            rows_s = (np.asarray(ms["ids"]) != -1).sum(axis=1)
+            lvls["main"] = {**ms, "meta": {
+                "level": np.int64(self.policy.level_for(
+                    int(rows_s.sum()), self.delta_capacity))}}
+        for key in sorted(lvls):
+            s = dict(lvls[key])
+            meta = s.pop("meta")
+            n_pad = int(np.asarray(s["x"]).shape[1])
+            xs, ids, bids = (np.asarray(s[k])
+                             for k in ("x", "ids", "bucket_ids"))
+            live = np.asarray(s["live"])[:, :n_pad]
+            gx = np.concatenate([xs[sh][live[sh]]
+                                 for sh in range(S_saved)])
+            gi = np.concatenate([ids[sh][live[sh]]
+                                 for sh in range(S_saved)])
+            gb = np.concatenate([bids[sh][live[sh]]
+                                 for sh in range(S_saved)])
+            if gi.shape[0] == 0:
+                continue        # fully-dead level: a merge drops it
+            self._make_level(
+                [(gx[sh::S], gi[sh::S], gb[sh::S]) for sh in range(S)],
+                int(np.asarray(meta["level"])))
+        # delta rows: gather live slots across saved shards, re-deal
+        dx, dbid, did, dlive = (np.asarray(ds[k]) for k in
+                                ("x", "bucket_ids", "ids", "live"))
+        dcount = np.asarray(ds["count"]).astype(np.int64)
+        masks = [dlive[sh, :int(dcount[sh])] for sh in range(S_saved)]
+        rx = np.concatenate([dx[sh, :int(dcount[sh])][masks[sh]]
+                             for sh in range(S_saved)])
+        ri = np.concatenate([did[sh, :int(dcount[sh])][masks[sh]]
+                             for sh in range(S_saved)])
+        rb = np.concatenate([dbid[sh, :int(dcount[sh])][masks[sh]]
+                             for sh in range(S_saved)])
+        C = self.delta_capacity
+        if rx.shape[0] > S * C:
+            self._make_level([(rx[sh::S], ri[sh::S], rb[sh::S])
+                              for sh in range(S)], 0)
+            rx, ri, rb = rx[:0], ri[:0], rb[:0]
+        put = lambda a: jax.device_put(jnp.asarray(a), self._shard)
+        nx = np.zeros((S, C + 1, self._d), self._dtype)
+        nb = np.full((S, C + 1, L), -1, np.int32)
+        ni = np.full((S, C + 1), -1, np.int32)
+        nl = np.zeros((S, C + 1), bool)
+        nc = np.zeros((S,), np.int32)
+        for sh in range(S):
+            px, pi, pb = rx[sh::S], ri[sh::S], rb[sh::S]
+            k = px.shape[0]
+            nx[sh, :k], nb[sh, :k], ni[sh, :k] = px, pb, pi
+            nl[sh, :k] = True
+            nc[sh] = k
+            for i, e in enumerate(pi.tolist()):
+                self._loc[int(e)] = (sh, "d", int(i))
+        self._delta = {"x": put(nx), "bucket_ids": put(nb),
+                       "ids": put(ni), "live": put(nl), "count": put(nc)}
+        self._delta_count_s = nc.astype(np.int64)
+        self._delta_live_s = nc.astype(np.int64)
         return self

@@ -36,6 +36,40 @@ import numpy as np
 OPS = ("create", "insert", "delete", "query", "compact", "drop")
 
 
+class CrashError(RuntimeError):
+    """Raised by ``CrashPoint`` — a distinct type so tests can catch
+    exactly the injected fault and never mask a real bug."""
+
+
+class CrashPoint:
+    """Crash injector for ``CheckpointManager(fault_hook=...)``.
+
+    The manager calls its hook at named points during a save —
+    ``"leaf"`` after each leaf/chunk lands, ``"pre_commit"`` just
+    before the COMMITTED marker, ``"post_commit"`` just after.  A
+    ``CrashPoint(point, after=n)`` raises ``CrashError`` on the
+    (n+1)-th hit of its named point, simulating the process dying
+    mid-save; every other point passes through.  ``hits`` counts
+    matches seen, ``fired`` records whether the crash happened — a
+    test can assert the injection actually triggered.
+    """
+
+    def __init__(self, point, after=0):
+        self.point = point
+        self.after = int(after)
+        self.hits = 0
+        self.fired = False
+
+    def __call__(self, point, **info):
+        if point != self.point:
+            return
+        self.hits += 1
+        if self.hits > self.after:
+            self.fired = True
+            raise CrashError(f"injected crash at {point!r} "
+                             f"(hit {self.hits}, info {info})")
+
+
 def decode_ops(ints, names=("a", "b", "c")):
     """Decode a raw integer stream into a valid op stream.
 

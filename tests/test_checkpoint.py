@@ -1,4 +1,5 @@
-"""Checkpoint manager: roundtrip, atomicity, retention, elastic restore."""
+"""Checkpoint manager: roundtrip, atomicity, retention, elastic
+restore, content-addressed incremental saves, crash litter hygiene."""
 import os
 
 import jax
@@ -6,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from harness import CrashError, CrashPoint
+from repro.checkpoint import CheckpointManager, array_digest
+from repro.obs.schema import CHECKPOINT_STATS_KEYS
 
 
 def _state(seed=0):
@@ -75,3 +78,113 @@ def test_elastic_restore_new_sharding(tmp_path):
     assert step == 3
     leaf = restored["params"]["blocks"][0]["w"]
     assert leaf.sharding == NamedSharding(mesh, P())
+
+
+def _chunk_files(tmp_path):
+    d = os.path.join(str(tmp_path), "chunks")
+    return sorted(os.listdir(d)) if os.path.isdir(d) else []
+
+
+def test_incremental_roundtrip_and_chunk_reuse(tmp_path):
+    """Incremental saves are content-addressed: identical leaves across
+    steps share one chunk file, only changed leaves write bytes, and
+    restore is bit-exact from the chunk store."""
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state()
+    mgr.save_incremental(1, s, blocking=True)
+    n1 = len(_chunk_files(tmp_path))
+    s2 = dict(s, opt={"step": jnp.int32(8)})      # one leaf changes
+    mgr.save_incremental(2, s2, blocking=True)
+    st = mgr.stats()
+    assert st["incremental_saves"] == 2
+    assert st["chunks_written"] == n1 + 1         # only the new leaf
+    assert st["chunks_reused"] == n1 - 1          # params shared
+    assert st["bytes_reused"] > 0
+    restored, step = mgr.restore(s)
+    assert step == 2
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["blocks"][0]["w"]),
+        np.asarray(s["params"]["blocks"][0]["w"]))
+    assert int(restored["opt"]["step"]) == 8
+
+
+def test_incremental_digest_hints_trusted_only_with_chunk(tmp_path):
+    """A digest hint whose chunk file is missing must be recomputed,
+    not trusted — otherwise a stale hint silently drops a leaf."""
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state()
+    bogus = {path: "0" * 32 for path in ("opt/step",)}
+    mgr.save_incremental(1, s, digests=bogus, blocking=True)
+    restored, step = mgr.restore(s)
+    assert step == 1 and int(restored["opt"]["step"]) == 7
+
+
+def test_chunk_gc_follows_retention(tmp_path):
+    """Chunks referenced only by GC'd steps are removed; chunks shared
+    with kept steps survive."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    s = _state()
+    mgr.save_incremental(1, s, blocking=True)
+    s2 = dict(s, opt={"step": jnp.int32(9)})
+    mgr.save_incremental(2, s2, blocking=True)
+    assert mgr.committed_steps() == [2]
+    assert mgr.stats()["chunks_gced"] >= 1        # step 1's opt leaf
+    # every surviving chunk is referenced by the kept manifest
+    restored, step = mgr.restore(s)
+    assert step == 2 and int(restored["opt"]["step"]) == 9
+
+
+def test_crashed_save_swept_on_restart(tmp_path):
+    """A save killed before COMMITTED leaves a torn step; a new
+    manager on the directory (the restart) sweeps it and serves the
+    newest committed step, with no .tmp litter anywhere."""
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state()
+    mgr.save_incremental(1, s, blocking=True)
+    crash = CrashPoint("pre_commit")
+    cmgr = CheckpointManager(str(tmp_path), fault_hook=crash)
+    with pytest.raises(CrashError):
+        cmgr.save_incremental(2, _state(1), blocking=True)
+    assert crash.fired
+    mgr2 = CheckpointManager(str(tmp_path))       # restart
+    assert mgr2.latest_step() == 1
+    assert mgr2.stats()["litter_swept"] >= 1
+    for root, _, files in os.walk(str(tmp_path)):
+        assert not [f for f in files if f.endswith(".tmp")], root
+    restored, step = mgr2.restore(s)
+    assert step == 1 and int(restored["opt"]["step"]) == 7
+
+
+def test_crash_mid_leaf_full_save_swept(tmp_path):
+    """The fault seam covers the full (non-incremental) writer too:
+    dying after the first leaf leaves an uncommitted step dir that the
+    next manager init removes."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(), blocking=True)
+    crash = CrashPoint("leaf", after=1)
+    cmgr = CheckpointManager(str(tmp_path), fault_hook=crash)
+    with pytest.raises(CrashError):
+        cmgr.save(2, _state(1), blocking=True)
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 1
+    assert mgr2.committed_steps() == [1]
+
+
+def test_checkpoint_stats_schema_pinned(tmp_path):
+    """stats() matches CHECKPOINT_STATS_KEYS exactly — the contract
+    the BENCH emitter and dashboards scrape."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_incremental(1, _state(), blocking=True)
+    assert frozenset(mgr.stats()) == CHECKPOINT_STATS_KEYS
+
+
+def test_array_digest_dtype_and_shape_sensitive():
+    """The content address covers dtype and shape, not just bytes —
+    two different logical arrays with equal byte payloads must not
+    alias a chunk."""
+    a = np.arange(8, dtype=np.int32)
+    assert array_digest(a) == array_digest(a.copy())
+    assert array_digest(a) != array_digest(a.astype(np.float32))
+    assert array_digest(a) != array_digest(a.reshape(2, 4))
+    b = a.copy(); b[0] = 99
+    assert array_digest(a) != array_digest(b)

@@ -346,3 +346,65 @@ for f in ("lsh", "linear"):
 print("CKPT_MID_OK")
 """)
     assert "CKPT_MID_OK" in out
+
+
+def test_elastic_restore_different_shard_count(tmp_path):
+    """Warm-standby failover onto a DIFFERENT mesh shape: a 2-shard
+    stack checkpointed mid-merge (incremental, content-addressed)
+    restores onto a 1-shard mesh — live rows re-deal round-robin, dead
+    rows drop, the staged schedule re-derives — with bit-identical
+    reported sets per forced route, a consistent _loc map, and the
+    restored index still streaming.  Then back up: the 1-shard state
+    restores onto the 2-shard mesh and still agrees."""
+    out = _run(_COMMON + rf"""
+from repro.checkpoint import CheckpointManager
+
+lsm = CompactionPolicy(delta_fill=1.0, tombstone_ratio=2.0, fanout=2,
+                       step_rows=64)
+mesh1 = jax.make_mesh((1,), ("data",))
+def mk(m):
+    return ShardedDynamicHybridIndex(fam, num_buckets=B, mesh=m, m=M,
+                                     cap=CAP, delta_capacity=64,
+                                     policy=lsm, routing="per_shard",
+                                     max_out=900, key=0)
+sh = mk(mesh)
+sh.build(x[:256])
+sh.insert(x[256:600])
+sh.delete(range(32, 96))
+assert sh.has_compaction_work
+sh.compact_step(64)                       # mid-merge snapshot
+mgr = CheckpointManager({str(tmp_path)!r})
+mgr.save_index(5, sh, incremental=True)
+
+narrow = mk(mesh1)                        # standby on a smaller mesh
+assert mgr.restore_index(narrow) == 5
+assert narrow.n == sh.n
+assert narrow.validate_locations() == narrow.n
+for f in ("lsh", "linear"):
+    assert (narrow.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+# both drain their (re-derived) schedules and still agree
+while narrow.compact_step(512):
+    pass
+while sh.compact_step(512):
+    pass
+for f in ("lsh", "linear"):
+    assert (narrow.query(q, R, force=f).neighbor_sets()
+            == sh.query(q, R, force=f).neighbor_sets()), f
+# the narrow standby keeps streaming with fresh ids
+new = narrow.insert(x[600:620])
+assert new.min() >= 600 and narrow.delete(new.tolist()) == 20
+narrow.validate_locations()
+
+# scale back out: 1-shard state onto the 2-shard mesh
+mgr.save_index(6, narrow, incremental=True)
+wide = mk(mesh)
+assert mgr.restore_index(wide) == 6
+assert wide.n == narrow.n
+assert wide.validate_locations() == wide.n
+for f in ("lsh", "linear"):
+    assert (wide.query(q, R, force=f).neighbor_sets()
+            == narrow.query(q, R, force=f).neighbor_sets()), f
+print("ELASTIC_OK")
+""")
+    assert "ELASTIC_OK" in out
